@@ -1,0 +1,99 @@
+"""Attribute roofline bytes/flops of a dry-run cell to jax ops.
+
+Walks the saved HLO with loop multipliers (same machinery as the
+roofline) and aggregates collective wire bytes and memory traffic by the
+op_name metadata tail — the "profile" used to pick hillclimb levers.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.attribute <cell-name> [--top 20]
+  (cell-name as in reports/dryrun/<cell>.json, without extension)
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import re
+from collections import defaultdict
+from pathlib import Path
+
+from repro.launch import hlo_analysis as H
+
+REPORTS = Path(__file__).resolve().parent.parent / "reports" / "dryrun"
+_OPNAME = re.compile(r'op_name="([^"]+)"')
+
+
+def attribute(hlo_text: str, *, bf16_native: bool = True):
+    comps, entry = H._parse(hlo_text)
+    mem = defaultdict(float)
+    coll = defaultdict(float)
+
+    def key_of(inst):
+        m = _OPNAME.search(inst.rest)
+        name = m.group(1) if m else inst.op
+        tail = "/".join(name.split("/")[-2:])
+        return re.sub(r"[.\d]+", "", tail)[:60]
+
+    def walk(comp_name, mult, timescan=False):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for iname in comp.order:
+            inst = comp.instrs[iname]
+            if inst.op == "while":
+                m = H._TRIP_RE.search(inst.rest)
+                trips = int(m.group(1)) if m else 1
+                body = H._called_comp(inst.rest, "body")
+                if body:
+                    walk(body, mult * trips,
+                         timescan or trips >= H.TIMESCAN_TRIPS)
+                continue
+            kind = next(
+                (k for k in H._COLLECTIVES
+                 if inst.op == k or inst.op == k + "-start"), None
+            )
+            if kind is not None:
+                rb = H._shape_bytes(inst.shape)
+                if (bf16_native and "dot_general" in inst.rest
+                        and "f32[" in inst.shape
+                        and "bf16[" not in inst.shape):
+                    rb *= 0.5
+                g = H._group_size(inst.rest)
+                wire = {
+                    "all-reduce": 2.0 * rb * (g - 1) / g,
+                    "all-gather": rb * (g - 1) / g,
+                    "reduce-scatter": rb * (g - 1),
+                    "all-to-all": rb * (g - 1) / g,
+                    "collective-permute": float(rb),
+                }[kind]
+                coll[(kind, key_of(inst))] += wire * mult
+                continue
+            if inst.op in H._SKIP_MEM_OPS:
+                continue
+            b = H._instr_mem_bytes(comp, inst, comps) * mult
+            tag = "[scan]" if timescan else ""
+            mem[(inst.op + tag, key_of(inst))] += b
+
+    walk(entry, 1.0)
+    return mem, coll
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cell")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+    path = REPORTS / f"{args.cell}.hlo.gz"
+    with gzip.open(path, "rt") as fh:
+        txt = fh.read()
+    mem, coll = attribute(txt)
+    print(f"== collective wire bytes (top {args.top}) ==")
+    for (kind, key), b in sorted(coll.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {b/1e9:10.2f} GB  {kind:18s} {key}")
+    print(f"== memory traffic (top {args.top}) ==")
+    for (op, key), b in sorted(mem.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"  {b/1e9:10.2f} GB  {op:22s} {key}")
+
+
+if __name__ == "__main__":
+    main()

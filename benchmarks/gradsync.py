@@ -1,0 +1,84 @@
+"""Gradient-sync benchmark: the paper's technique inside a training step.
+
+Simulates the per-step gradient synchronisation of a data-parallel
+training job across pods (node = pod, ppn = chips per pod — DESIGN.md §2)
+under the TPU max-rate parameters, for a realistic bucket-size mix:
+
+  * latency-bound small payloads: loss scalar, grad-norm scalar, fused
+    norm/bias bucket (the paper's core regime),
+  * bandwidth-bound large payloads: fused parameter-gradient buckets.
+
+Compares pure-RD, pure-SMP, pure-NAP and the paper-faithful "auto" switch
+(NAP under 2 KiB, pod-local reduce + RS/AG above).
+"""
+
+from __future__ import annotations
+
+from repro.core import perf_model as pm, simulator as sim
+
+P = pm.TPU_V5E_POD
+
+# (name, bytes, count) — a ~100M-param model with fused buckets
+BUCKETS = [
+    ("loss_scalar", 4, 1),
+    ("grad_norm_scalar", 4, 1),
+    ("small_fused_norms", 2048, 1),
+    ("grad_bucket_16MB", 16 << 20, 6),
+]
+
+
+def _large_cost(s: float, n: int, ppn: int) -> float:
+    """Pod-local reduce + Rabenseifner RS/AG over pods (bandwidth path)."""
+    import math
+
+    intra = (P.alpha_l + P.beta_l * s) * (
+        math.log2(ppn) if ppn > 1 else 0.0
+    )
+    steps = 2 * math.ceil(math.log2(n)) if n > 1 else 0
+    bytes_moved = 2.0 * s * (n - 1) / n
+    inter = steps * P.alpha + bytes_moved / P.R_b
+    return intra + inter + P.gamma * s * 2
+
+
+def main() -> None:
+    rows = []
+    for n_pods, ppn in [(2, 16), (8, 16), (64, 16)]:
+        totals = {"rd": 0.0, "smp": 0.0, "nap": 0.0, "auto": 0.0}
+        for _, s, count in BUCKETS:
+            for algo in ["rd", "smp", "nap"]:
+                if s <= 1 << 16:
+                    t = sim.simulate_algorithm(algo, n_pods, ppn, float(s), P)
+                else:  # simulator is per-message; large buckets use Eq 4-6
+                    t = {
+                        "rd": pm.cost_rd,
+                        "smp": pm.cost_smp,
+                        "nap": pm.cost_nap,
+                    }[algo](float(s), n_pods, ppn, P)
+                totals[algo] += t * count
+            t_auto = (
+                sim.simulate_algorithm("nap", n_pods, ppn, float(s), P)
+                if s <= 2048
+                else _large_cost(float(s), n_pods, ppn)
+            )
+            totals["auto"] += t_auto * count
+        for algo, t in totals.items():
+            rows.append(
+                (
+                    f"gradsync_{algo}_pods{n_pods}",
+                    t * 1e6,
+                    f"chips={n_pods*ppn}",
+                )
+            )
+        rows.append(
+            (
+                f"gradsync_auto_speedup_vs_rd_pods{n_pods}",
+                totals["rd"] / totals["auto"],
+                "size-switched",
+            )
+        )
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Paper-figure benchmarks (Bienz/Olson/Gropp 2019, Figs 10-17 + §III).
+
+Each function prints CSV rows ``name,us_per_call,derived`` and returns the
+rows for run.py.  Model rows use Eq 4-6 (perf_model); "sim" rows execute
+the real schedules in the event-driven simulator (the measured analogue —
+see DESIGN.md §2).  Blue Waters parameters throughout, as in the paper.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import napalg, perf_model as pm, simulator as sim
+
+P = pm.BLUE_WATERS
+PPN = 16  # the paper's Blue Waters configuration
+
+
+def _emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    return rows
+
+
+def fig10_model_scaling():
+    """Modeled allreduce cost of one 8-byte value vs process count."""
+    rows = []
+    for nodes in [2, 8, 32, 128, 512, 2048, 8192]:
+        p = nodes * PPN
+        for algo, fn in [
+            ("rd", pm.cost_rd),
+            ("smp", pm.cost_smp),
+            ("nap", pm.cost_nap),
+        ]:
+            us = fn(8.0, nodes, PPN, P) * 1e6
+            rows.append((f"fig10_model_{algo}_p{p}", us, f"nodes={nodes}"))
+    return _emit(rows)
+
+
+def fig11_model_sizes():
+    """Modeled cost vs reduction size at 32 768 processes."""
+    rows = []
+    nodes = 2048
+    for s in [8, 32, 128, 512, 2048, 8192, 32768, 131072]:
+        for algo, fn in [
+            ("rd", pm.cost_rd),
+            ("smp", pm.cost_smp),
+            ("nap", pm.cost_nap),
+        ]:
+            us = fn(float(s), nodes, PPN, P) * 1e6
+            rows.append((f"fig11_model_{algo}_s{s}", us, f"bytes={s}"))
+    xo = pm.crossover_bytes(nodes, PPN, P)
+    rows.append(("fig11_nap_smp_crossover_bytes", xo, "paper:~2048"))
+    return _emit(rows)
+
+
+def fig12_sim_scaling():
+    """Simulated (schedule-executed) cost of an 8-byte allreduce vs p."""
+    rows = []
+    for nodes in [2, 8, 32, 128, 512, 2048]:
+        p = nodes * PPN
+        for algo in ["rd", "smp", "nap"]:
+            us = sim.simulate_algorithm(algo, nodes, PPN, 8.0, P) * 1e6
+            rows.append((f"fig12_sim_{algo}_p{p}", us, f"nodes={nodes}"))
+    return _emit(rows)
+
+
+def fig13_speedup():
+    """NAP speedup over RD and SMP for a single-value reduction vs p."""
+    rows = []
+    for nodes in [16, 64, 256, 1024, 4096]:
+        p = nodes * PPN
+        nap = sim.simulate_algorithm("nap", nodes, PPN, 8.0, P)
+        for base in ["rd", "smp"]:
+            b = sim.simulate_algorithm(base, nodes, PPN, 8.0, P)
+            rows.append(
+                (f"fig13_speedup_vs_{base}_p{p}", b / nap, f"x{b / nap:.2f}")
+            )
+    return _emit(rows)
+
+
+def fig14_sim_sizes():
+    """Simulated cost and NAP speedup vs reduction size at 32 768 procs."""
+    rows = []
+    nodes = 2048
+    for s in [8, 64, 512, 2048, 8192, 65536]:
+        times = {
+            algo: sim.simulate_algorithm(algo, nodes, PPN, float(s), P)
+            for algo in ["rd", "smp", "nap"]
+        }
+        for algo, t in times.items():
+            rows.append((f"fig14_sim_{algo}_s{s}", t * 1e6, f"bytes={s}"))
+        rows.append(
+            (
+                f"fig15_speedup_vs_smp_s{s}",
+                times["smp"] / times["nap"],
+                "nap_wins" if times["nap"] < times["smp"] else "smp_wins",
+            )
+        )
+    return _emit(rows)
+
+
+def fig16_overhead():
+    """Figs 16/17 analogue: per-step dispatch overhead vs fused schedule.
+
+    The paper shows NAP-on-top-of-MPI pays per-call overhead that an
+    in-MPICH implementation would not.  Our equivalent: executing each NAP
+    step as a separate XLA dispatch vs one fused HLO.  We measure the real
+    single-op dispatch latency on this host and model the difference.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x + 1.0)
+    x = jnp.zeros((16,))
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    iters = 200
+    for _ in range(iters):
+        f(x).block_until_ready()
+    delta = (time.perf_counter() - t0) / iters  # per-dispatch overhead
+
+    rows = []
+    nodes = 2048
+    for s in [8, 2048]:
+        fused = sim.simulate_algorithm("nap", nodes, PPN, float(s), P)
+        n_dispatch = napalg.nap_num_steps(nodes, PPN) * 2 + 2
+        stepwise = fused + n_dispatch * delta
+        rows.append((f"fig16_nap_fused_s{s}", fused * 1e6, "in-XLA"))
+        rows.append(
+            (f"fig16_nap_stepwise_s{s}", stepwise * 1e6, "on-top dispatch")
+        )
+        rows.append(
+            (
+                f"fig16_overhead_ratio_s{s}",
+                stepwise / fused,
+                f"dispatch={delta*1e6:.1f}us",
+            )
+        )
+    return _emit(rows)
+
+
+def table_msgcounts():
+    """§III claims: max inter-node messages per chip, RD vs SMP vs NAP."""
+    rows = []
+    for nodes, ppn in [(16, 16), (256, 16), (4096, 16), (14, 4), (64, 4)]:
+        nap = napalg.build_nap_schedule(nodes, ppn)
+        rd = napalg.build_rd_schedule(nodes, ppn)
+        smp = napalg.build_smp_schedule(nodes, ppn)
+        rows.append(
+            (
+                f"msgs_nap_n{nodes}_ppn{ppn}",
+                napalg.message_counts(nap)["max_per_chip"],
+                f"steps={nap.num_internode_steps}",
+            )
+        )
+        rows.append(
+            (
+                f"msgs_rd_n{nodes}_ppn{ppn}",
+                rd.max_internode_messages_per_chip(),
+                "log2(n)",
+            )
+        )
+        rows.append(
+            (
+                f"msgs_smp_n{nodes}_ppn{ppn}",
+                smp.max_internode_messages_per_chip(),
+                "log2(n)",
+            )
+        )
+    return _emit(rows)
+
+
+ALL = [
+    fig10_model_scaling,
+    fig11_model_sizes,
+    fig12_sim_scaling,
+    fig13_speedup,
+    fig14_sim_sizes,
+    fig16_overhead,
+    table_msgcounts,
+]

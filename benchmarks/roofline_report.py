@@ -1,0 +1,44 @@
+"""Roofline report: per-(arch x shape x mesh) terms from dry-run artifacts.
+
+Reads the JSON files produced by ``repro.launch.dryrun`` under
+``reports/dryrun/`` and prints the three roofline terms (seconds), the
+dominant bottleneck, and the useful-FLOPs ratio for every cell.
+Run ``PYTHONPATH=src python -m repro.launch.dryrun --all`` first.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+REPORTS = Path(__file__).resolve().parent.parent / "reports" / "dryrun"
+
+
+def main() -> None:
+    files = sorted(REPORTS.glob("*.json")) if REPORTS.exists() else []
+    if not files:
+        print("roofline_report,0,no_dryrun_artifacts_run_launch.dryrun")
+        return
+    for f in files:
+        cell = json.loads(f.read_text())
+        r = cell.get("roofline")
+        if not r:
+            continue
+        tag = f"_{cell['tag']}" if cell.get("tag") else ""
+        name = f"roofline_{cell['arch']}_{cell['shape']}_{cell['mesh']}{tag}"
+        memk = r.get("memory_kernel_s") or r["memory_s"]
+        terms = {
+            "compute": r["compute_s"],
+            "memory": memk,
+            "collective": r["collective_s"],
+        }
+        bound = max(terms, key=terms.get)
+        total_us = max(terms.values()) * 1e6
+        print(
+            f"{name},{total_us:.3f},"
+            f"bound={bound};useful_flops_ratio={r['useful_flops_ratio']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

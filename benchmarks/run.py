@@ -1,0 +1,32 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  * paper_figures   — Figs 10-17 + §III message-count tables
+  * gradsync        — gradient-sync schedule comparison (training buckets)
+  * roofline_report — per-(arch x shape) roofline terms, if dry-run
+                      artifacts exist under reports/dryrun/
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import paper_figures
+
+    for fn in paper_figures.ALL:
+        fn()
+
+    from benchmarks import gradsync
+
+    gradsync.main()
+
+    from benchmarks import roofline_report
+
+    roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Batched serving example: prefill + cached greedy decode.
+
+Serves three very different cached architectures — a dense GQA model
+(KV cache), the RWKV6 SSM (constant-size state), and whisper (enc-dec
+with cross-attention) — through the same ``decode_step`` API, and checks
+the sliding-window ring buffer by decoding past the window on a
+gemma2-style local+global miniature.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.launch.serve import serve_batch
+from repro.models import build_model
+
+
+def demo(arch: str, batch=2, prompt_len=12, gen=8):
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+    extras = None
+    if cfg.encoder_layers:
+        extras = {
+            "frames": jax.random.normal(
+                jax.random.PRNGKey(2), (batch, 16, cfg.d_model)
+            ).astype(jnp.dtype(cfg.dtype))
+        }
+    t0 = time.time()
+    gen_toks = serve_batch(
+        model, params, prompts, gen_len=gen, batch_extras=extras,
+        max_len=prompt_len + gen + 4,
+    )
+    dt = time.time() - t0
+    print(
+        f"{arch:24s} cache={'state' if cfg.family=='ssm' else 'kv':5s} "
+        f"generated {gen_toks.shape[1]} toks/req in {dt:5.2f}s -> "
+        f"{np.asarray(gen_toks[0, :6])}"
+    )
+    assert np.isfinite(dt) and gen_toks.shape == (batch, gen)
+
+
+def main():
+    for arch in ["qwen2-72b", "rwkv6-1.6b", "whisper-tiny", "gemma2-27b"]:
+        demo(arch)
+    print("\nall families served through one decode_step API")
+
+
+if __name__ == "__main__":
+    main()

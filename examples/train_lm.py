@@ -1,0 +1,88 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the full production substrate on CPU: synthetic data pipeline,
+AdamW + cosine schedule, async atomic checkpoints with auto-resume, and
+straggler monitoring.  A mid-run process "crash" is simulated to show
+checkpoint/restart working (the loop resumes from the last checkpoint and
+reaches the same final state).
+
+The model is a 12-layer llama-style decoder (~100M params), per the
+"train a ~100M model for a few hundred steps" deliverable.  Expect the
+loss to drop by >1 nat in ~200 steps on the synthetic mixture.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import shutil
+import time
+
+from repro.configs.base import (
+    ModelConfig,
+    OptimizerConfig,
+    SubLayer,
+    TrainConfig,
+)
+from repro.launch.train import build_training
+
+LM_100M = ModelConfig(
+    name="repro-lm-100m",
+    family="dense",
+    num_layers=12,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=32_000,
+    pattern=(SubLayer("attn"),),
+    dtype="float32",
+    remat="none",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_lm")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    print(f"params ~= {LM_100M.param_count()/1e6:.1f}M")
+
+    train_cfg = TrainConfig(
+        steps=args.steps,
+        seq_len=args.seq,
+        global_batch=args.batch,
+        checkpoint_every=50,
+        optimizer=OptimizerConfig(
+            lr=6e-4, schedule="cosine",
+            warmup_steps=20, decay_steps=args.steps,
+        ),
+    )
+
+    # phase 1: train to 60% of the run, then simulate a crash
+    t0 = time.time()
+    loop = build_training(LM_100M, train_cfg, ckpt_dir=args.ckpt_dir)
+    crash_at = int(args.steps * 0.6)
+    loop.run(crash_at)
+    first = loop.metrics_log[0]["loss"]
+    print(f"[phase 1] step {crash_at}: loss {loop.metrics_log[-1]['loss']:.3f}")
+    del loop  # "crash": process state gone; checkpoints survive
+
+    # phase 2: a fresh loop auto-resumes from the newest checkpoint
+    loop = build_training(LM_100M, train_cfg, ckpt_dir=args.ckpt_dir)
+    assert loop.start_step > 0, "must resume from checkpoint, not scratch"
+    print(f"[phase 2] auto-resumed at step {loop.start_step}")
+    loop.run(args.steps)
+    last = loop.metrics_log[-1]["loss"]
+    print(
+        f"[done] steps={args.steps} loss {first:.3f} -> {last:.3f} "
+        f"({time.time()-t0:.0f}s, stragglers={len(loop.monitor.events)})"
+    )
+    assert last < first - 0.5, "loss must drop materially"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+from .base import (
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    ShapeConfig,
+    SubLayer,
+    TrainConfig,
+    SHAPES,
+)
+from .archs import ARCHS, get_config, reduced
+
+__all__ = [
+    "ARCHS",
+    "MambaConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "OptimizerConfig",
+    "ShapeConfig",
+    "SubLayer",
+    "TrainConfig",
+    "SHAPES",
+    "get_config",
+    "reduced",
+]

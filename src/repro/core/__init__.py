@@ -1,0 +1,25 @@
+from . import collectives, extensions, grad_sync, napalg, perf_model, simulator
+from .collectives import (
+    hierarchical_allreduce,
+    nap_allreduce,
+    rd_allreduce,
+    ring_allreduce,
+    smp_allreduce,
+)
+from .napalg import build_nap_schedule, nap_num_steps
+
+__all__ = [
+    "build_nap_schedule",
+    "collectives",
+    "extensions",
+    "grad_sync",
+    "hierarchical_allreduce",
+    "nap_allreduce",
+    "nap_num_steps",
+    "napalg",
+    "perf_model",
+    "rd_allreduce",
+    "ring_allreduce",
+    "simulator",
+    "smp_allreduce",
+]

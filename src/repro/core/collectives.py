@@ -1,0 +1,359 @@
+"""shard_map implementations of the paper's allreduce algorithms.
+
+Every function here is designed to be called *inside* a
+``jax.shard_map``-traced function (or any context with named mesh axes).
+The communication schedules are computed statically from the mesh axis
+sizes (``jax.lax.axis_size``) by :mod:`repro.core.napalg`, then lowered to
+``jax.lax.ppermute`` / ``psum`` calls — one ``collective-permute`` HLO per
+inter-node step, which is exactly the quantity the paper minimizes.
+
+TPU mapping (DESIGN.md §2): "node" = pod (ICI domain), "ppn" = chips per
+pod, "inter-node network" = inter-pod DCI.  The same functions work for
+any two-level mesh-axis hierarchy.
+
+Algorithms:
+
+* :func:`nap_allreduce` — the paper's contribution (§III): intra psum,
+  ``ceil(log_ppn(n))`` joint-axis collective-permutes, intra psums.
+* :func:`rd_allreduce` — node-agnostic recursive doubling (§II, Fig. 3).
+* :func:`smp_allreduce` — MPICH's node-aware master-process algorithm
+  (§II.A, Fig. 4).
+* :func:`ring_allreduce` — bandwidth-optimal ring reduce-scatter +
+  allgather (Patarasuk & Yuan, cited as [25]).
+* :func:`rabenseifner_allreduce` — reduce-scatter + allgather via native
+  XLA collectives (§II, [5], [8]); the "large message" regime winner.
+* :func:`hierarchical_allreduce` — algorithm dispatcher with the paper's
+  size-based switch (NAP below ``small_threshold_bytes``, Figs 11/14/15).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import napalg
+
+__all__ = [
+    "nap_allreduce",
+    "rd_allreduce",
+    "smp_allreduce",
+    "ring_allreduce",
+    "rabenseifner_allreduce",
+    "hierarchical_allreduce",
+    "ALGORITHMS",
+]
+
+AxisNames = str | tuple[str, ...]
+
+
+def _as_tuple(axes: AxisNames) -> tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+# op registry: (pairwise fold, named-axis reduce, identity)
+_OPS: dict[str, tuple[Callable, Callable, float]] = {
+    "sum": (jnp.add, lax.psum, 0.0),
+    "max": (jnp.maximum, lax.pmax, -jnp.inf),
+    "min": (jnp.minimum, lax.pmin, jnp.inf),
+}
+
+
+def _chip_index(inter_axes: tuple[str, ...], intra_axes: tuple[str, ...]):
+    """SMP-style flat chip id: node-major, local-rank-minor."""
+    node = 0
+    for ax in inter_axes:
+        node = node * lax.axis_size(ax) + lax.axis_index(ax)
+    rank = 0
+    for ax in intra_axes:
+        rank = rank * lax.axis_size(ax) + lax.axis_index(ax)
+    ppn = int(np.prod([lax.axis_size(ax) for ax in intra_axes]))
+    return node * ppn + rank
+
+
+def _mask_lookup(mask: np.ndarray, chip) -> jax.Array:
+    """Per-chip boolean from a host-side mask table (tiny constant)."""
+    return jnp.asarray(mask)[chip]
+
+
+# ---------------------------------------------------------------------------
+# NAP allreduce — the paper's algorithm
+# ---------------------------------------------------------------------------
+
+
+def nap_allreduce(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames,
+    op: str = "sum",
+) -> jax.Array:
+    """Node-Aware Parallel allreduce (paper §III, Algorithm 1).
+
+    Reduces ``x`` over the combined ``inter_axes x intra_axes`` device
+    grid.  Each inter-node step lowers to a single ``collective-permute``
+    over the *joint* axes (plus rare donor rounds for ragged node counts),
+    so a chip sends at most ``ceil(log_ppn(n))`` inter-node messages —
+    versus ``log2(n)`` for recursive doubling.
+
+    Args:
+      x: per-chip value (any shape); identical reduction returned on every
+        chip of the grid.
+      inter_axes: mesh axis name(s) spanning the *slow* domain (pods).
+      intra_axes: mesh axis name(s) spanning the *fast* domain (chips
+        within a pod).
+      op: "sum" | "max" | "min".
+    """
+    inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+    fold, named_reduce, ident = _OPS[op]
+    n = int(np.prod([lax.axis_size(ax) for ax in inter]))
+    ppn = int(np.prod([lax.axis_size(ax) for ax in intra]))
+    sched = napalg.build_nap_schedule(n, ppn)
+    joint = inter + intra
+
+    v = named_reduce(x, intra)
+    if not sched.steps:
+        return v
+    chip = _chip_index(inter, intra)
+    n_chips = n * ppn
+    for step in sched.steps:
+        contrib = jnp.full_like(v, ident)
+        for rnd in step.rounds:
+            recv = lax.ppermute(v, joint, rnd)
+            rmask = np.zeros(n_chips, dtype=bool)
+            for _, dst in rnd:
+                rmask[dst] = True
+            contrib = fold(
+                contrib, jnp.where(_mask_lookup(rmask, chip), recv, ident)
+            )
+        smask = np.zeros(n_chips, dtype=bool)
+        for c in step.self_chips:
+            smask[c] = True
+        contrib = fold(
+            contrib, jnp.where(_mask_lookup(smask, chip), v, ident)
+        )
+        v = named_reduce(contrib, intra)
+    return v
+
+
+# ---------------------------------------------------------------------------
+# point-to-point schedule executor (RD / SMP baselines)
+# ---------------------------------------------------------------------------
+
+
+def _run_p2p_schedule(
+    x: jax.Array,
+    sched: napalg.P2PSchedule,
+    joint: tuple[str, ...],
+    inter: tuple[str, ...],
+    intra: tuple[str, ...],
+    op: str,
+) -> jax.Array:
+    fold, _, _ = _OPS[op]
+    chip = _chip_index(inter, intra)
+    n_chips = sched.n_chips
+    v = x
+    for step in sched.steps:
+        recv = lax.ppermute(v, joint, step.pairs)
+        rmask = np.zeros(n_chips, dtype=bool)
+        for _, dst in step.pairs:
+            rmask[dst] = True
+        flag = _mask_lookup(rmask, chip)
+        if step.combine:
+            v = jnp.where(flag, fold(v, recv), v)
+        else:
+            v = jnp.where(flag, recv, v)
+    return v
+
+
+def rd_allreduce(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames = (),
+    op: str = "sum",
+) -> jax.Array:
+    """Node-agnostic recursive doubling over the flattened device grid.
+
+    The classic butterfly (paper Fig. 3): ``log2(p)`` pairwise exchange
+    steps, each lowering to one collective-permute.  Node-oblivious — at
+    every inter-node step *all* chips of a node cross the slow domain with
+    duplicate payloads, which is precisely the waste NAP removes.
+    """
+    inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+    joint = inter + intra
+    n = int(np.prod([lax.axis_size(ax) for ax in inter]))
+    ppn = int(np.prod([lax.axis_size(ax) for ax in intra])) if intra else 1
+    sched = napalg.build_rd_schedule(n, ppn)
+    return _run_p2p_schedule(x, sched, joint, inter, intra, op)
+
+
+def smp_allreduce(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames,
+    op: str = "sum",
+) -> jax.Array:
+    """MPICH SMP allreduce (paper §II.A, Fig. 4).
+
+    Local reduce to a master chip per pod, recursive doubling among the
+    masters, local broadcast.  Same inter-node message *count* as RD but
+    only one active chip per pod (no duplicate bytes, no injection
+    pressure; all other chips idle — the imbalance NAP fixes).
+    """
+    inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+    joint = inter + intra
+    n = int(np.prod([lax.axis_size(ax) for ax in inter]))
+    ppn = int(np.prod([lax.axis_size(ax) for ax in intra]))
+    sched = napalg.build_smp_schedule(n, ppn)
+    return _run_p2p_schedule(x, sched, joint, inter, intra, op)
+
+
+# ---------------------------------------------------------------------------
+# bandwidth-regime baselines
+# ---------------------------------------------------------------------------
+
+
+def ring_allreduce(
+    x: jax.Array, *, axes: AxisNames, op: str = "sum"
+) -> jax.Array:
+    """Bandwidth-optimal ring allreduce (reduce-scatter + allgather).
+
+    ``2 (p-1)`` steps of neighbour exchange over the ring formed by the
+    flattened ``axes``; each chip moves ``2 s (p-1)/p`` bytes — the data
+    lower bound (paper §II, [25]).  Latency-poor for small ``s``.
+    """
+    fold, _, _ = _OPS[op]
+    ax = _as_tuple(axes)
+    p = int(np.prod([lax.axis_size(a) for a in ax]))
+    if p == 1:
+        return x
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.size) % p
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(p, -1)
+    idx = 0
+    for a in ax:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    fwd = [(i, (i + 1) % p) for i in range(p)]
+
+    # reduce-scatter: after p-1 shifts, chip i owns the full sum of chunk
+    # (i+1) mod p.
+    def rs_body(k, carry):
+        chunks, acc = carry
+        send = lax.dynamic_index_in_dim(
+            chunks, (idx - k) % p, axis=0, keepdims=False
+        )
+        payload = jnp.where(k == 0, send, acc)
+        recv = lax.ppermute(payload, ax, fwd)
+        own = lax.dynamic_index_in_dim(
+            chunks, (idx - k - 1) % p, axis=0, keepdims=False
+        )
+        return chunks, fold(recv, own)
+
+    _, acc = lax.fori_loop(0, p - 1, rs_body, (chunks, chunks[0]))
+
+    # allgather ring: circulate the owned chunk p-1 times.
+    def ag_body(k, carry):
+        chunks, cur = carry
+        recv = lax.ppermute(cur, ax, fwd)
+        owner = (idx - k - 1) % p  # chunk id arriving at step k
+        chunks = lax.dynamic_update_index_in_dim(
+            chunks, recv, (owner + 1) % p, axis=0
+        )
+        return chunks, recv
+
+    chunks = lax.dynamic_update_index_in_dim(
+        chunks, acc, (idx + 1) % p, axis=0
+    )
+    chunks, _ = lax.fori_loop(0, p - 1, ag_body, (chunks, acc))
+    out = chunks.reshape(-1)
+    if pad:
+        out = out[: out.size - pad]
+    return out.reshape(orig_shape).astype(orig_dtype)
+
+
+def rabenseifner_allreduce(
+    x: jax.Array, *, axes: AxisNames, op: str = "sum"
+) -> jax.Array:
+    """Reduce-scatter + allgather via native XLA collectives ([5], [8]).
+
+    Optimal data transport with ``2 log2(p)`` message steps; the paper's
+    recommended regime for reductions above ~2 KiB.  XLA emits
+    ``reduce-scatter`` + ``all-gather`` directly, so on TPU this also
+    enjoys ICI pipelining.
+    """
+    if op != "sum":
+        raise NotImplementedError("rabenseifner path supports sum only")
+    ax = _as_tuple(axes)
+    p = int(np.prod([lax.axis_size(a) for a in ax]))
+    if p == 1:
+        return x
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.size) % p
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    shard = lax.psum_scatter(flat.reshape(p, -1), ax, scatter_dimension=0, tiled=False)
+    out = lax.all_gather(shard, ax, axis=0, tiled=False).reshape(-1)
+    if pad:
+        out = out[: out.size - pad]
+    return out.reshape(orig_shape).astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def _psum_allreduce(x, *, inter_axes, intra_axes=(), op="sum", **_):
+    _, named_reduce, _ = _OPS[op]
+    return named_reduce(x, _as_tuple(inter_axes) + _as_tuple(intra_axes))
+
+
+ALGORITHMS: dict[str, Callable] = {
+    "nap": nap_allreduce,
+    "rd": rd_allreduce,
+    "smp": smp_allreduce,
+    "psum": _psum_allreduce,
+}
+
+
+def hierarchical_allreduce(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames,
+    algorithm: str = "auto",
+    op: str = "sum",
+    small_threshold_bytes: int = 2048,
+) -> jax.Array:
+    """Allreduce over a two-level hierarchy with the paper's size switch.
+
+    ``algorithm="auto"`` picks NAP for payloads below
+    ``small_threshold_bytes`` (the paper's measured crossover, Figs 14/15)
+    and Rabenseifner reduce-scatter + allgather above it.
+    """
+    if algorithm == "auto":
+        nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
+        algorithm = "nap" if nbytes <= small_threshold_bytes else "rabenseifner"
+    if algorithm == "ring":
+        return ring_allreduce(
+            x, axes=_as_tuple(inter_axes) + _as_tuple(intra_axes), op=op
+        )
+    if algorithm == "rabenseifner":
+        # node-aware large-message path: reduce inside the pod first so a
+        # single de-duplicated payload crosses the slow domain (SMP-style),
+        # then RS+AG over the inter axes, as §VI's future-work suggests.
+        _, named_reduce, _ = _OPS[op]
+        local = named_reduce(x, _as_tuple(intra_axes))
+        return rabenseifner_allreduce(local, axes=inter_axes, op=op)
+    fn = ALGORITHMS[algorithm]
+    return fn(x, inter_axes=inter_axes, intra_axes=intra_axes, op=op)

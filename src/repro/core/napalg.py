@@ -1,0 +1,481 @@
+"""NAP (Node-Aware Parallel) allreduce schedule construction.
+
+This module is the pure-math heart of the paper
+
+    "Node-Aware Improvements to Allreduce", Bienz, Olson, Gropp (2019).
+
+It builds, entirely in Python/NumPy (no jax), the static communication
+schedule of the NAP allreduce over a logical grid of ``n_nodes`` nodes with
+``ppn`` processes ("chips" in the TPU mapping) each:
+
+  1. an intra-node allreduce so every chip holds its node's partial;
+  2. ``ceil(log_ppn(n_nodes))`` *inter-node* steps.  At step ``i`` the nodes
+     are partitioned into groups of up to ``ppn`` subgroups, each subgroup
+     being a group of the previous step (size ``~ppn^i``).  The chip with
+     local rank ``r`` on the node at position ``q`` of subgroup ``m``
+     exchanges its (subgroup-``m``) partial with the chip of local rank
+     ``m`` on the node at position ``q`` of subgroup ``r``;
+  3. after the exchange, an intra-node allreduce over the received
+     contributions leaves every chip of every node of the group holding the
+     identical group partial — the invariant of paper §III.
+
+Non-power-of-``ppn`` node counts (paper §III.A) use *balanced* subgroup
+sizes ("groups of nearly equal size", Fig. 9).  When a chip's partner node
+does not exist (its target subgroup is smaller), the otherwise-idle chip of
+the target subgroup — the one with ``local rank == its own subgroup index``
+— *donates* its partial to the orphaned chip ("... will instead send data
+to the idle process"; the Fig. 9 example P14 <- P34 is reproduced in the
+unit tests).  The donor does not need to receive anything back.
+
+The schedule is consumed by three independent clients:
+
+* ``repro.core.collectives`` lowers each step to one (or more)
+  ``jax.lax.ppermute`` calls over the joint device mesh axes;
+* ``repro.core.simulator`` replays the message lists under the max-rate
+  performance model to produce the paper's "measured" figures;
+* the test-suite executes the schedule with a NumPy interpreter
+  (``simulate_allreduce``) and checks it against ``np.sum``/``max``/... for
+  a wide (n_nodes, ppn) sweep.
+
+Chip numbering is SMP-style (paper §III): ``chip = node * ppn + rank``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "NapStep",
+    "NapSchedule",
+    "build_nap_schedule",
+    "build_rd_schedule",
+    "build_smp_schedule",
+    "simulate_allreduce",
+    "nap_num_steps",
+    "message_counts",
+]
+
+
+# ---------------------------------------------------------------------------
+# schedule data structures
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NapStep:
+    """One inter-node step of the NAP allreduce.
+
+    Attributes:
+      rounds: tuple of ppermute rounds; each round is a tuple of
+        ``(src_chip, dst_chip)`` pairs forming a partial permutation (each
+        chip appears at most once as a source and at most once as a
+        destination per round).  Round 0 carries the main pairwise
+        exchange; later rounds exist only when ragged subgroups make one
+        donor chip serve several orphaned receivers.
+      recv_chips: chips that receive a partial this step (any round).
+      self_chips: idle chips whose *own* value participates in the
+        following intra-node allreduce (local rank == own subgroup index).
+      groups: the node grouping this step reduces over — a tuple of groups,
+        each a tuple of subgroups, each a tuple of node ids.  Kept for
+        introspection, simulation and tests.
+    """
+
+    rounds: tuple[tuple[tuple[int, int], ...], ...]
+    recv_chips: tuple[int, ...]
+    self_chips: tuple[int, ...]
+    groups: tuple[tuple[tuple[int, ...], ...], ...]
+
+    @property
+    def messages(self) -> list[tuple[int, int]]:
+        """All (src, dst) messages of this step, across rounds."""
+        return [pair for rnd in self.rounds for pair in rnd]
+
+
+@dataclass(frozen=True)
+class NapSchedule:
+    """A full NAP allreduce schedule over ``n_nodes`` x ``ppn`` chips."""
+
+    n_nodes: int
+    ppn: int
+    steps: tuple[NapStep, ...]
+
+    @property
+    def n_chips(self) -> int:
+        return self.n_nodes * self.ppn
+
+    @property
+    def num_internode_steps(self) -> int:
+        return len(self.steps)
+
+    def max_messages_per_chip(self) -> int:
+        """Maximum number of inter-node messages *sent* by any chip."""
+        sends = np.zeros(self.n_chips, dtype=np.int64)
+        for step in self.steps:
+            for src, dst in step.messages:
+                if src != dst:
+                    sends[src] += 1
+        return int(sends.max(initial=0))
+
+    def total_internode_messages(self) -> int:
+        return sum(
+            sum(1 for s, d in step.messages if s != d) for step in self.steps
+        )
+
+
+# ---------------------------------------------------------------------------
+# grouping: balanced, top-down
+# ---------------------------------------------------------------------------
+
+
+def nap_num_steps(n_nodes: int, ppn: int) -> int:
+    """ceil(log_ppn(n_nodes)); 0 for a single node."""
+    if n_nodes <= 1:
+        return 0
+    if ppn < 2:
+        raise ValueError("NAP requires ppn >= 2 for multi-node reductions")
+    return max(1, math.ceil(math.log(n_nodes) / math.log(ppn) - 1e-12))
+
+
+def _balanced_split(nodes: Sequence[int], k: int) -> list[list[int]]:
+    """Split ``nodes`` into ``k`` contiguous parts with sizes differing <=1.
+
+    Larger parts come first, so ragged "extra" positions live in the
+    leading subgroups — matching the paper's "subgroups with extra nodes".
+    """
+    n = len(nodes)
+    base, rem = divmod(n, k)
+    out, start = [], 0
+    for i in range(k):
+        size = base + (1 if i < rem else 0)
+        out.append(list(nodes[start : start + size]))
+        start += size
+    return [p for p in out if p]
+
+
+def _build_levels(
+    nodes: list[int], n_steps: int, ppn: int
+) -> list[list[list[list[int]]]]:
+    """Recursive balanced grouping.
+
+    Returns ``levels`` where ``levels[i]`` is the list of *groups* reduced
+    at step ``i`` (0 = first inter-node step), each group being a list of
+    subgroups (node-id lists).  Step ``i``'s subgroups are exactly step
+    ``i-1``'s groups, so the §III invariant (all chips of a subgroup hold
+    the identical partial) holds by construction.
+    """
+    levels: list[list[list[list[int]]]] = [[] for _ in range(n_steps)]
+    if n_steps == 0 or len(nodes) <= 1:
+        return levels
+
+    # Number of subgroups of the (final) top-level step.  Each subgroup must
+    # be reducible within the remaining n_steps - 1 steps, i.e. its size
+    # must not exceed ppn ** (n_steps - 1).
+    cap = ppn ** (n_steps - 1)
+    k = min(ppn, math.ceil(len(nodes) / cap))
+    subgroups = _balanced_split(nodes, k)
+    levels[n_steps - 1] = [subgroups]
+
+    for sg in subgroups:
+        sub_levels = _build_levels(sg, n_steps - 1, ppn)
+        for i in range(n_steps - 1):
+            levels[i].extend(sub_levels[i])
+    return levels
+
+
+# ---------------------------------------------------------------------------
+# schedule construction
+# ---------------------------------------------------------------------------
+
+
+def build_nap_schedule(n_nodes: int, ppn: int) -> NapSchedule:
+    """Build the full NAP schedule (paper Algorithm 1 + §III.A extension)."""
+    if n_nodes < 1 or ppn < 1:
+        raise ValueError("n_nodes and ppn must be positive")
+    n_steps = nap_num_steps(n_nodes, ppn) if n_nodes > 1 else 0
+    levels = _build_levels(list(range(n_nodes)), n_steps, ppn)
+
+    steps: list[NapStep] = []
+    for level in levels:
+        rounds: list[list[tuple[int, int]]] = [[]]
+        # per-round source occupancy to keep each round a valid permutation
+        used_src: list[set[int]] = [set()]
+        used_dst: list[set[int]] = [set()]
+        recv: set[int] = set()
+        selfc: set[int] = set()
+
+        def emit(src: int, dst: int) -> None:
+            """Place (src, dst) in the earliest round where both are free."""
+            for i in range(len(rounds)):
+                if src not in used_src[i] and dst not in used_dst[i]:
+                    rounds[i].append((src, dst))
+                    used_src[i].add(src)
+                    used_dst[i].add(dst)
+                    return
+            rounds.append([(src, dst)])
+            used_src.append({src})
+            used_dst.append({dst})
+
+        covered: set[int] = set()
+        for group in level:
+            k = len(group)
+            for sg in group:
+                covered.update(sg)
+            if k <= 1:
+                # degenerate group: its single subgroup already holds the
+                # partial.  Exactly ONE rank per node re-contributes it so
+                # the closing intra-node allreduce is value-preserving for
+                # non-idempotent ops (sum/prod).
+                for sg in group:
+                    for node in sg:
+                        selfc.add(node * ppn)
+                continue
+            sizes = [len(sg) for sg in group]
+            # round-robin donor cursor per target subgroup
+            donor_cursor = [0] * k
+            for m, sg in enumerate(group):
+                for q, node in enumerate(sg):
+                    for r in range(ppn):
+                        chip = node * ppn + r
+                        if r == m:
+                            # idle/self chip: own value feeds the local
+                            # reduction (and may donate, handled below).
+                            selfc.add(chip)
+                            continue
+                        if r >= k:
+                            continue  # inactive rank: contributes identity
+                        if q < sizes[r]:
+                            partner_node = group[r][q]
+                            partner = partner_node * ppn + m
+                            emit(chip, partner)  # deliver subgroup m partial
+                            recv.add(partner)
+                        # else: our partner node does not exist; subgroup
+                        # m's partial still reaches subgroup r through the
+                        # positions that do exist.  Our own *receive* is
+                        # repaired by a donor below.
+            # donor repair: chip (m, q, r) with q >= sizes[r] receives the
+            # subgroup-r partial from subgroup r's idle chip (paper §III.A,
+            # Fig. 9: P14 <- P34).
+            for m, sg in enumerate(group):
+                for q, node in enumerate(sg):
+                    for r in range(k):
+                        if r == m or q < sizes[r]:
+                            continue
+                        orphan = node * ppn + r
+                        donor_node = group[r][donor_cursor[r] % sizes[r]]
+                        donor_cursor[r] += 1
+                        donor = donor_node * ppn + r  # idle chip of sg r
+                        emit(donor, orphan)
+                        recv.add(orphan)
+
+        # Nodes untouched by any group this step (singleton subtrees of the
+        # ragged recursion) keep their value: one rank re-contributes it.
+        for node in range(n_nodes):
+            if node not in covered:
+                selfc.add(node * ppn)
+
+        steps.append(
+            NapStep(
+                rounds=tuple(tuple(rnd) for rnd in rounds if rnd),
+                recv_chips=tuple(sorted(recv)),
+                self_chips=tuple(sorted(selfc)),
+                groups=tuple(
+                    tuple(tuple(sg) for sg in group) for group in level
+                ),
+            )
+        )
+    return NapSchedule(n_nodes=n_nodes, ppn=ppn, steps=tuple(steps))
+
+
+# ---------------------------------------------------------------------------
+# baseline schedules (for the simulator / message-count comparisons)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class P2PStep:
+    """One step of a point-to-point baseline schedule.
+
+    ``pairs`` is a list of (src, dst) messages issued concurrently;
+    ``combine`` marks whether receivers fold the payload into their value.
+    """
+
+    pairs: tuple[tuple[int, int], ...]
+    combine: bool = True
+
+
+@dataclass(frozen=True)
+class P2PSchedule:
+    """A flat schedule of point-to-point steps plus metadata."""
+
+    n_nodes: int
+    ppn: int
+    steps: tuple[P2PStep, ...]
+    kind: str = "generic"
+
+    @property
+    def n_chips(self) -> int:
+        return self.n_nodes * self.ppn
+
+    def max_internode_messages_per_chip(self) -> int:
+        sends = np.zeros(self.n_chips, dtype=np.int64)
+        for step in self.steps:
+            for src, dst in step.pairs:
+                if src // self.ppn != dst // self.ppn:
+                    sends[src] += 1
+        return int(sends.max(initial=0))
+
+
+def build_rd_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
+    """Node-agnostic recursive doubling over all p = n*ppn chips.
+
+    Non-power-of-two counts use the standard MPICH fold: the first
+    ``2*rem`` chips pre-combine into ``rem`` survivors, a power-of-two core
+    runs the butterfly, and results are returned to the folded chips.
+    """
+    p = n_nodes * ppn
+    steps: list[P2PStep] = []
+    pow2 = 1 << (p.bit_length() - 1)
+    rem = p - pow2
+    # fold: odd chips of the first 2*rem send to their even neighbour
+    if rem:
+        steps.append(
+            P2PStep(tuple((2 * i + 1, 2 * i) for i in range(rem)))
+        )
+    core = [2 * i for i in range(rem)] + list(range(2 * rem, p))
+    for bit in range(int(math.log2(pow2)) if pow2 > 1 else 0):
+        pairs = []
+        for idx, chip in enumerate(core):
+            partner = core[idx ^ (1 << bit)]
+            pairs.append((chip, partner))
+        steps.append(P2PStep(tuple(pairs)))
+    if rem:
+        steps.append(
+            P2PStep(
+                tuple((2 * i, 2 * i + 1) for i in range(rem)), combine=False
+            )
+        )
+    return P2PSchedule(n_nodes, ppn, tuple(steps), kind="rd")
+
+
+def build_smp_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
+    """MPICH SMP allreduce: local tree reduce -> RD among masters -> bcast."""
+    steps: list[P2PStep] = []
+
+    # intra-node binomial-tree reduction to local rank 0
+    span = 1
+    while span < ppn:
+        pairs = []
+        for node in range(n_nodes):
+            base = node * ppn
+            for r in range(0, ppn, 2 * span):
+                if r + span < ppn:
+                    pairs.append((base + r + span, base + r))
+        if pairs:
+            steps.append(P2PStep(tuple(pairs)))
+        span *= 2
+    # recursive doubling among masters (chip = node*ppn)
+    masters = [node * ppn for node in range(n_nodes)]
+    pow2 = 1 << (n_nodes.bit_length() - 1)
+    rem = n_nodes - pow2
+    if rem:
+        steps.append(
+            P2PStep(tuple((masters[2 * i + 1], masters[2 * i]) for i in range(rem)))
+        )
+    core = [masters[2 * i] for i in range(rem)] + masters[2 * rem :]
+    for bit in range(int(math.log2(pow2)) if pow2 > 1 else 0):
+        pairs = []
+        for idx, chip in enumerate(core):
+            partner = core[idx ^ (1 << bit)]
+            pairs.append((chip, partner))
+        steps.append(P2PStep(tuple(pairs)))
+    if rem:
+        steps.append(
+            P2PStep(
+                tuple((masters[2 * i], masters[2 * i + 1]) for i in range(rem)),
+                combine=False,
+            )
+        )
+    # intra-node binomial-tree broadcast from rank 0
+    span = 1 << max(0, (ppn - 1).bit_length() - 1)
+    bcast_steps = []
+    while span >= 1:
+        pairs = []
+        for node in range(n_nodes):
+            base = node * ppn
+            for r in range(0, ppn, 2 * span):
+                if r + span < ppn:
+                    pairs.append((base + r, base + r + span))
+        if pairs:
+            bcast_steps.append(P2PStep(tuple(pairs), combine=False))
+        span //= 2
+    steps.extend(bcast_steps)
+    return P2PSchedule(n_nodes, ppn, tuple(steps), kind="smp")
+
+
+# ---------------------------------------------------------------------------
+# NumPy interpreter (test oracle + simulator substrate)
+# ---------------------------------------------------------------------------
+
+_OPS: dict[str, tuple[Callable[[np.ndarray, np.ndarray], np.ndarray], float]] = {
+    "sum": (np.add, 0.0),
+    "max": (np.maximum, -np.inf),
+    "min": (np.minimum, np.inf),
+    "prod": (np.multiply, 1.0),
+}
+
+
+def simulate_allreduce(
+    schedule: NapSchedule, values: np.ndarray, op: str = "sum"
+) -> np.ndarray:
+    """Execute a NAP schedule on host, returning per-chip results.
+
+    ``values`` has shape (n_chips, ...).  This is the correctness oracle
+    used by the tests: the result must equal the op-reduction of ``values``
+    along axis 0, replicated to every chip.
+    """
+    fold, ident = _OPS[op]
+    n, ppn = schedule.n_nodes, schedule.ppn
+    v = np.array(values, dtype=np.float64, copy=True)
+    if v.shape[0] != n * ppn:
+        raise ValueError("values must have one leading row per chip")
+
+    def local_allreduce(x: np.ndarray) -> np.ndarray:
+        out = np.empty_like(x)
+        for node in range(n):
+            sl = slice(node * ppn, (node + 1) * ppn)
+            red = x[sl][0]
+            for row in x[sl][1:]:
+                red = fold(red, row)
+            out[sl] = red
+        return out
+
+    v = local_allreduce(v)
+    for step in schedule.steps:
+        snapshot = v.copy()
+        contrib = np.full_like(v, ident)
+        for src, dst in step.messages:
+            contrib[dst] = fold(contrib[dst], snapshot[src])
+        for chip in step.self_chips:
+            contrib[chip] = fold(contrib[chip], snapshot[chip])
+        v = local_allreduce(contrib)
+    return v
+
+
+def message_counts(schedule: NapSchedule) -> dict[str, int]:
+    """Inter-node message statistics for comparisons/figures."""
+    per_chip = np.zeros(schedule.n_chips, dtype=np.int64)
+    total = 0
+    for step in schedule.steps:
+        for src, dst in step.messages:
+            if src // schedule.ppn != dst // schedule.ppn:
+                per_chip[src] += 1
+                total += 1
+    return {
+        "steps": schedule.num_internode_steps,
+        "max_per_chip": int(per_chip.max(initial=0)),
+        "total": total,
+    }

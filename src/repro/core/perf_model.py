@@ -1,0 +1,153 @@
+"""Node-aware performance models — paper §IV, Equations (1)-(6).
+
+Implements the postal model (Eq 1), the intra/inter split model (Eq 2) and
+the max-rate model with injection-bandwidth limiting (Eq 3), plus the
+closed-form costs of the three allreduce algorithms:
+
+  Eq 4  recursive doubling:  intra log2(ppn) + inter log2(n) (max-rate) + γ
+  Eq 5  SMP:                 intra log2(ppn) + inter log2(n) (full R_b) + γ
+  Eq 6  NAP:                 intra log2(p)   + inter log_ppn(n) (max-rate)
+                             + γ (log2(p) + log_ppn(n))
+
+Two parameter sets ship:
+
+* ``BLUE_WATERS`` — Cray XE6/Gemini-class constants in the range measured
+  by the max-rate papers ([11], [12]); these reproduce the *qualitative*
+  paper results (NAP best below ~2 KiB at 32 768 processes, SMP best
+  above, speedup growing with process count).
+* ``TPU_V5E_POD`` — the TPU mapping: "node" = pod (ICI domain), inter-node
+  = inter-pod DCI; used by the roofline/collective analysis.
+
+All sizes are bytes, all times seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = [
+    "MachineParams",
+    "BLUE_WATERS",
+    "TPU_V5E_POD",
+    "postal_cost",
+    "maxrate_message_cost",
+    "cost_rd",
+    "cost_smp",
+    "cost_nap",
+    "crossover_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    """Two-level max-rate machine model (paper Eq 3)."""
+
+    alpha_l: float  # intra-node per-message latency  [s]
+    beta_l: float   # intra-node per-byte cost        [s/B]
+    alpha: float    # inter-node per-message latency  [s]
+    R_b: float      # inter-node per-process bandwidth [B/s] (1/beta)
+    R_N: float      # per-node injection bandwidth     [B/s]
+    gamma: float    # local reduction cost             [s/B]
+    name: str = "machine"
+
+
+# Gemini-class constants (order of magnitude from the max-rate papers).
+BLUE_WATERS = MachineParams(
+    alpha_l=5.0e-7,
+    beta_l=1.8e-10,   # ~5.5 GB/s shared-memory copy
+    alpha=2.6e-6,
+    R_b=2.3e9,        # ~2.3 GB/s per process pair
+    R_N=5.5e9,        # ~5.5 GB/s node injection
+    gamma=2.5e-11,    # ~40 GB/s local reduce stream
+    name="blue_waters",
+)
+
+# TPU mapping: node = pod. Intra-"node" transport is ICI (per-link ~50 GB/s,
+# ~1 us software latency through XLA collectives); inter-pod is the data
+# centre network with per-host NICs shared by 4 chips.
+TPU_V5E_POD = MachineParams(
+    alpha_l=1.0e-6,
+    beta_l=2.2e-11,   # ~45 GB/s ICI effective
+    alpha=1.0e-5,
+    R_b=6.25e9,       # ~6.25 GB/s per chip across the DCN
+    R_N=2.5e10,       # ~25 GB/s per-host NIC (4 chips)
+    gamma=1.25e-12,   # 819 GB/s HBM-bound vector add
+    name="tpu_v5e_pod",
+)
+
+
+def _log2(x: int) -> float:
+    return math.log2(x) if x > 1 else 0.0
+
+
+def _log_ppn(n: int, ppn: int) -> int:
+    """ceil(log_ppn(n)) — inter-node steps of NAP (non-powers pay the next
+    power's step count, paper §VI)."""
+    if n <= 1:
+        return 0
+    if ppn < 2:
+        return max(0, math.ceil(_log2(n)))
+    return max(1, math.ceil(math.log(n) / math.log(ppn) - 1e-12))
+
+
+def postal_cost(t: float, s: float, c: float, p: MachineParams) -> float:
+    """Eq 1: T = alpha t + beta s + gamma c (node-agnostic postal model)."""
+    return p.alpha * t + s / p.R_b + p.gamma * c
+
+
+def maxrate_message_cost(
+    s: float, p: MachineParams, active_per_node: int = 1
+) -> float:
+    """Eq 3 inter-node term for one message step with ``active_per_node``
+    concurrent senders per node: alpha + ppn_act*s / min(R_N, ppn_act*R_b).
+    """
+    k = max(1, active_per_node)
+    return p.alpha + (k * s) / min(p.R_N, k * p.R_b)
+
+
+def cost_rd(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Eq 4: recursive doubling. Every chip crosses the network log2(n)
+    times with ppn concurrent senders per node (injection-limited)."""
+    intra = (p.alpha_l + p.beta_l * s) * _log2(ppn)
+    inter = maxrate_message_cost(s, p, active_per_node=ppn) * _log2(n)
+    comp = p.gamma * s * _log2(n * ppn)
+    return intra + inter + comp
+
+
+def cost_smp(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Eq 5: SMP/master algorithm. One active chip per node: full R_b."""
+    intra = (p.alpha_l + p.beta_l * s) * _log2(ppn)
+    inter = (p.alpha + s / p.R_b) * _log2(n)
+    comp = p.gamma * s * _log2(n * ppn)
+    return intra + inter + comp
+
+
+def cost_nap(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Eq 6: NAP. log_ppn(n) inter steps (all ppn chips inject), intra
+    cost grows to log2(p), plus log_ppn(n) extra local combines."""
+    steps = _log_ppn(n, ppn)
+    intra = (p.alpha_l + p.beta_l * s) * _log2(n * ppn)
+    inter = maxrate_message_cost(s, p, active_per_node=ppn) * steps
+    comp = p.gamma * s * (_log2(n * ppn) + steps)
+    return intra + inter + comp
+
+
+def crossover_bytes(
+    n: int,
+    ppn: int,
+    p: MachineParams,
+    lo: float = 8.0,
+    hi: float = 1 << 22,
+) -> float:
+    """Smallest message size where SMP becomes cheaper than NAP (the
+    paper's measured ~2048 B at 32 768 processes)."""
+    if cost_nap(lo, n, ppn, p) > cost_smp(lo, n, ppn, p):
+        return lo
+    while hi / lo > 1.01:
+        mid = math.sqrt(lo * hi)
+        if cost_nap(mid, n, ppn, p) <= cost_smp(mid, n, ppn, p):
+            lo = mid
+        else:
+            hi = mid
+    return math.sqrt(lo * hi)

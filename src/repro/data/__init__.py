@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, SyntheticLM
+
+__all__ = ["Prefetcher", "SyntheticLM"]

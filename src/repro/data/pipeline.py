@@ -1,0 +1,109 @@
+"""Deterministic synthetic LM data pipeline.
+
+Design goals for the 1000-node regime:
+
+* **Stateless addressing**: batch ``i`` is a pure function of
+  ``(seed, step)`` — any host can (re)produce its shard without global
+  coordination, so restarts and elastic re-meshes are bitwise
+  reproducible (no data-order drift after failover).
+* **Sharded placement**: batches are built per-host and placed with the
+  mesh's batch sharding (``jax.device_put`` with NamedSharding).
+* **Prefetch**: a small background thread keeps ``depth`` batches ahead.
+
+The token distribution is a mixture of Zipfian unigrams and short
+repeated motifs — enough structure that a ~100M model's loss visibly
+drops within a few hundred steps (used by examples/train_lm.py).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["SyntheticLM", "Prefetcher"]
+
+
+@dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    mesh: Mesh | None = None
+    batch_axes: tuple[str, ...] = ()
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step])
+        )
+
+    def batch(self, step: int) -> dict:
+        """Materialise batch ``step`` (host-side numpy)."""
+        rng = self._rng(step)
+        B, S, V = self.global_batch, self.seq_len, self.vocab_size
+        # zipfian unigrams
+        ranks = rng.zipf(1.3, size=(B, S)).astype(np.int64)
+        tokens = np.minimum(ranks, V - 1).astype(np.int32)
+        # motif injection: repeat a short pattern somewhere in each row
+        motif_len = min(16, S // 2)
+        motif = rng.integers(0, V, size=(B, motif_len), dtype=np.int32)
+        start = rng.integers(0, max(1, S - 2 * motif_len), size=B)
+        for b in range(B):
+            s0 = start[b]
+            tokens[b, s0 : s0 + motif_len] = motif[b]
+            tokens[b, s0 + motif_len : s0 + 2 * motif_len] = motif[b]
+        labels = np.concatenate(
+            [tokens[:, 1:], np.zeros((B, 1), np.int32)], axis=1
+        )
+        mask = np.ones((B, S), np.float32)
+        mask[:, -1] = 0.0
+        out = {"tokens": tokens, "labels": labels, "loss_mask": mask}
+        return self._place(out)
+
+    def _place(self, batch: dict) -> dict:
+        if self.mesh is None:
+            return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        ax = self.batch_axes or None
+        sh = NamedSharding(self.mesh, P(ax, None))
+        return {k: jax.device_put(v, sh) for k, v in batch.items()}
+
+
+class Prefetcher:
+    """Background prefetch of ``depth`` batches (thread + queue)."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0, depth: int = 2):
+        self._source = source
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._source.batch(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self) -> tuple[int, dict]:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

@@ -1,0 +1,3 @@
+from .ops import flash_attention, mamba_scan, rwkv6_scan
+
+__all__ = ["flash_attention", "mamba_scan", "rwkv6_scan"]

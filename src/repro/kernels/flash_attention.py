@@ -1,0 +1,149 @@
+"""Pallas TPU flash attention: blockwise online-softmax, VMEM-tiled.
+
+The compute hot-spot of every attention arch at prefill_32k.  One grid
+cell processes a (block_q x head_dim) query tile against the KV sequence
+in (block_k) tiles, carrying the online-softmax statistics (m, l) and the
+f32 accumulator in VMEM scratch; the K dimension is the minor grid axis,
+which TPU executes sequentially, so the scratch carries across k-steps.
+
+Supports causal masking, sliding windows (gemma2 local layers) and
+attention-logit soft-capping.  ``repro.kernels.ref.flash_attention_ref``
+is the pure-jnp oracle; ``repro.kernels.ops`` is the public jit wrapper
+(interpret=True on CPU, compiled on TPU).
+
+TPU sizing notes: block_q = block_k = 128 keeps the MXU matmuls
+(128 x hd) x (hd x 128) hardware-aligned for hd in {64, 128}; VMEM use
+per cell is q(128*hd) + k/v(2*128*hd) + acc(128*hd) f32 + p(128*128)
+< 1 MiB — far under the ~16 MiB VMEM budget, leaving headroom for
+double-buffered pipelines.  Causal cells fully above the diagonal are
+masked (a production variant would clamp the k-grid per q-block; kept
+uniform here so the same kernel serves the windowed variants).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1.0e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, window, softcap_val, block_q, block_k, n_k, kv_len,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if softcap_val is not None:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+
+    q_idx = qi * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_idx = ki * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    rel = q_idx - k_idx
+    mask = k_idx < kv_len  # padded keys never attended
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    # rows with no valid key yet keep m = NEG_INF; exp underflows to 0.
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalise():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (BH, S, hd) with heads pre-flattened (GQA expanded).
+
+    Returns (BH, S, hd) in q.dtype.
+    """
+    BH, S, hd = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    pad_q = (-S) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Sk_p = S + pad_q, Sk + pad_k
+    n_q, n_k = Sq_p // block_q, Sk_p // block_k
+    # padded keys masked out via the window/causal logic: give them k_idx
+    # beyond every query (mask=False rows handled by NEG_INF + l clamp)
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap_val=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=n_k,
+        kv_len=Sk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),   # l: running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),  # f32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S, :]

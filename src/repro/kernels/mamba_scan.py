@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the Mamba (S6) selective state-space scan.
+
+    state_t = exp(dt_t * A) * state_{t-1} + (dt_t * x_t) B_t
+    y_t     = state_t . C_t  + D * x_t            (per channel block)
+
+Grid: (batch, channel_blocks, n_chunks); the chunk axis is minor
+(sequential on TPU) so the (d_block x d_state) f32 state sits in VMEM
+scratch across chunks.  The channel dimension is tiled at ``block_d`` so
+arbitrary d_inner (e.g. jamba's 16384) streams through a fixed VMEM
+budget: tiles x(T_c x d_blk), dt(T_c x d_blk), B/C(T_c x N),
+state(d_blk x N) ≈ 0.6 MiB at T_c=64, d_blk=256, N=16.
+
+Like the RWKV6 kernel, the inner chunk is an exact ``fori_loop``
+recurrence (VPU work; the op is HBM-bandwidth-bound) — the win over the
+XLA scan is state residency + chunked HBM streaming, not MXU math.
+Oracle: ``repro.kernels.ref.mamba_scan_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba_scan_pallas"]
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, state_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)    # (T_c, d_blk)
+    dt = dt_ref[0].astype(jnp.float32)  # (T_c, d_blk)
+    A = A_ref[...].astype(jnp.float32)  # (d_blk, N)
+    B = B_ref[0].astype(jnp.float32)    # (T_c, N)
+    C = C_ref[0].astype(jnp.float32)    # (T_c, N)
+
+    def step(t, carry):
+        state, out = carry
+        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)[0]    # (d_blk,)
+        dtt = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]
+        Bt = jax.lax.dynamic_slice_in_dim(B, t, 1, 0)[0]    # (N,)
+        Ct = jax.lax.dynamic_slice_in_dim(C, t, 1, 0)[0]
+        dA = jnp.exp(dtt[:, None] * A)                      # (d_blk, N)
+        state = state * dA + (dtt * xt)[:, None] * Bt[None, :]
+        yt = (state * Ct[None, :]).sum(axis=1)              # (d_blk,)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, yt[None], t, 0
+        )
+        return state, out
+
+    state, out = lax.fori_loop(
+        0, chunk, step, (state_ref[...], jnp.zeros_like(x))
+    )
+    state_ref[...] = state
+    y_ref[0] = out.astype(y_ref.dtype)
+
+
+def mamba_scan_pallas(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 64,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x/dt: (Bsz, S, d_inner); A: (d_inner, N); B/C: (Bsz, S, N).
+
+    Returns y (Bsz, S, d_inner) f32 (caller adds the D-skip and gating).
+    """
+    Bsz, S, d_inner = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    block_d = min(block_d, d_inner)
+    pad_t = (-S) % chunk
+    pad_d = (-d_inner) % block_d
+    if pad_t or pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, pad_d)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_t), (0, pad_d)))
+        B = jnp.pad(B, ((0, 0), (0, pad_t), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad_t), (0, 0)))
+        A = jnp.pad(A, ((0, pad_d), (0, 0)))
+    Sp, Dp = S + pad_t, d_inner + pad_d
+    n_chunks, n_blk = Sp // chunk, Dp // block_d
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(Bsz, n_blk, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, Sp, Dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y[:, :S, :d_inner]

@@ -1,0 +1,93 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``impl`` selection: "pallas" compiles the kernel for TPU (interpret=True
+on CPU backends so the same call validates everywhere); "xla" routes to
+the pure-jnp reference (the dry-run default — the 512-device compile must
+not depend on Mosaic).  GQA head expansion and head flattening live here
+so model code passes (B, S, H, hd) tensors straight in.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .mamba_scan import mamba_scan_pallas
+from .rwkv6_scan import rwkv6_scan_pallas
+
+__all__ = ["flash_attention", "rwkv6_scan", "mamba_scan"]
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    impl: str = "pallas",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd) (GQA: H % KV == 0)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    if impl == "xla":
+        of = ref.flash_attention_ref(
+            qf, kf, vf, causal=causal, window=window, softcap=softcap
+        )
+    else:
+        of = flash_attention_pallas(
+            qf, kf, vf, causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_k=block_k, interpret=_on_cpu(),
+        )
+    return of.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def rwkv6_scan(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+    *, impl: str = "pallas", chunk: int = 64,
+) -> jax.Array:
+    """r/k/v/w: (B, S, H, hd); u: (H, hd). Returns (B, S, H, hd) f32."""
+    B, S, H, hd = r.shape
+
+    def flat(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    uf = jnp.tile(u, (B, 1))
+    if impl == "xla":
+        of = ref.rwkv6_scan_ref(flat(r), flat(k), flat(v), flat(w), uf)
+    else:
+        of = rwkv6_scan_pallas(
+            flat(r), flat(k), flat(v), flat(w), uf,
+            chunk=chunk, interpret=_on_cpu(),
+        )
+    return of.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def mamba_scan(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    *, impl: str = "pallas", chunk: int = 64, block_d: int = 256,
+) -> jax.Array:
+    """x/dt: (Bsz, S, d); A: (d, N); B/C: (Bsz, S, N) -> (Bsz, S, d) f32."""
+    if impl == "xla":
+        return ref.mamba_scan_ref(x, dt, A, B, C)
+    return mamba_scan_pallas(
+        x, dt, A, B, C, chunk=chunk, block_d=block_d, interpret=_on_cpu()
+    )

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Signatures mirror the kernels exactly; tests assert allclose across
+shape/dtype sweeps with the kernels in interpret mode.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["flash_attention_ref", "rwkv6_scan_ref", "mamba_scan_ref"]
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """q/k/v: (BH, S, hd) -> (BH, S, hd), plain softmax attention."""
+    hd = q.shape[-1]
+    s = jnp.einsum(
+        "bqh,bkh->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(q.shape[1])[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    rel = qi - ki
+    mask = jnp.ones_like(rel, dtype=bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> 0
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_scan_ref(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array
+) -> jax.Array:
+    """Sequential RWKV6 recurrence. r/k/v/w (BH,S,hd), u (BH,hd) -> f32."""
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    BH, S, hd = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # (BH, hd)
+        kv = kt[:, :, None] * vt[:, None, :]          # (BH, hd, hd)
+        out = jnp.einsum(
+            "bi,bij->bj", rt, state + u[:, :, None] * kv
+        )
+        state = wt[:, :, None] * state + kv
+        return state, out
+
+    state0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    _, outs = lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1)
+
+
+def mamba_scan_ref(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array
+) -> jax.Array:
+    """Sequential selective scan. x/dt (B,S,d), A (d,N), B/C (B,S,N)."""
+    x, dt, A, B, C = (t.astype(jnp.float32) for t in (x, dt, A, B, C))
+    Bsz, S, d = x.shape
+    N = A.shape[1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt[..., None] * A[None])
+        state = state * dA + (dtt * xt)[..., None] * Bt[:, None, :]
+        yt = jnp.einsum("bdn,bn->bd", state, Ct)
+        return state, yt
+
+    state0 = jnp.zeros((Bsz, d, N), jnp.float32)
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (x, dt, B, C)
+    )
+    _, ys = lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,517 @@
+"""Trip-count-aware HLO analysis: flops / memory traffic / collectives.
+
+``compiled.cost_analysis()`` visits a while-loop body ONCE, so any
+scanned model (layers scan, microbatch accumulation, q-chunked attention)
+is undercounted by the trip count — for an 80-layer x 16-microbatch
+train step that's a ~1000x error (verified in tests).  XLA's optimized
+HLO text, however, carries ``backend_config={"known_trip_count":{"n":..}}``
+on every scan-derived while op, so this module re-derives the roofline
+inputs by walking the call graph with multipliers:
+
+* flops: every ``dot`` costs 2 * |result| * contraction_size (operand
+  shapes resolved from the instruction table); fusion computations are
+  recursed for their dots; while bodies multiply by trip count.
+* memory traffic: per top-level instruction, operand + result bytes at
+  fusion boundaries (fusion internals NOT counted — XLA materialises
+  only fusion inputs/outputs), bookkeeping ops skipped; while bodies
+  multiplied by trip count.
+* collective wire bytes: same ring-traffic model as
+  :mod:`repro.launch.roofline`, multiplied through loops.
+
+This is a deliberately small structural parser — enough for models made
+of dots, elementwise fusions, scans and collectives (everything in this
+repo), not a general HLO semantics tool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HloStats", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{\s*$"
+)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+([a-z0-9\-]+)\((.*)$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CALLED_RE = re.compile(r"(?:calls|body|to_apply|branch_computations)=.?%?([\w.\-{}, %]+)")
+
+_SKIP_MEM_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "tuple-select",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(
+        _DTYPE_BYTES.get(d, 0) * (eval("*".join(dims.split(",")) or "1")
+                                  if dims else 1)
+        for d, dims in _SHAPE_RE.findall(shape_str)
+    )
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(x) for x in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # args + attributes (raw tail of the line)
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: dict[str, _Instr]
+    order: list[str]
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    memory_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {
+            k: {"bytes": 0.0, "count": 0.0} for k in _COLLECTIVES
+        }
+    )
+    dots: int = 0
+    unknown_trip_whiles: int = 0
+    # time-scan (trip count >= TIMESCAN_TRIPS, i.e. per-token SSM
+    # recurrences, not layer/microbatch scans) accounting: total body
+    # traffic vs pure slice I/O.  A VMEM-resident Pallas kernel
+    # (repro.kernels.{mamba,rwkv6}_scan) reduces the former to the
+    # latter; memory_bytes_kernel reports that TPU-target number.
+    timescan_memory_bytes: float = 0.0
+    timescan_io_bytes: float = 0.0
+    # attention-score traffic (op_name-tagged: the S x S einsums, masks,
+    # softmax) vs its flash-kernel replacement (q/k/v/o streams only —
+    # scores never leave VMEM).  repro.kernels.flash_attention is the
+    # validated TPU implementation.
+    attn_memory_bytes: float = 0.0
+    attn_io_bytes: float = 0.0
+
+    @property
+    def memory_bytes_kernel(self) -> float:
+        return (
+            self.memory_bytes
+            - self.timescan_memory_bytes
+            + self.timescan_io_bytes
+            - self.attn_memory_bytes
+            + self.attn_io_bytes
+        )
+
+
+TIMESCAN_TRIPS = 256
+
+# attention-score op_name signatures: the GQA einsum labels used by
+# repro.models.attention plus the mask select and softmax (attention is
+# the only softmax user outside the tiny MoE router).
+_ATTN_TAGS = ("bqkgh", "bkgqs", "bqkgh,bksh", "bkgqs,bksh")
+
+
+def _is_attn_tagged(rest: str) -> bool:
+    if any(t in rest for t in _ATTN_TAGS):
+        return True
+    if "jit(_where)/select_n" in rest and "shard_map" not in rest:
+        return True
+    return "softmax" in rest and "shard_map" not in rest
+
+
+def _parse(text: str) -> tuple[dict[str, _Comp], str | None]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    for raw in text.splitlines():
+        header = _COMP_HEADER_RE.match(raw)
+        if header:
+            cur = _Comp(header.group(2), {}, [])
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            # parameters from the signature
+            for pm in re.finditer(
+                r"%?([\w.\-]+):\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\])",
+                header.group(3),
+            ):
+                inst = _Instr(pm.group(1), pm.group(2), "parameter", "")
+                cur.instrs[inst.name] = inst
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(raw)
+        if m:
+            inst = _Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs[inst.name] = inst
+            cur.order.append(inst.name)
+    return comps, entry
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Names referenced in the argument list (before attributes)."""
+    args = rest.split("), ")[0] if "), " in rest else rest.rstrip(")")
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _called_comp(rest: str, key: str) -> str | None:
+    m = re.search(rf"{key}=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+_VIEW_OPS = {"bitcast", "reshape", "copy", "transpose", "convert",
+             "broadcast"}
+
+
+def _instr_mem_bytes(
+    comp: _Comp, inst: _Instr, comps: dict, *, bf16_native: bool = False
+) -> float:
+    """HBM traffic of one top-level instruction.
+
+    Slicing/in-place semantics matter enormously inside scans: a
+    ``dynamic-update-slice`` on an (S, B, D) carry touches only the
+    updated slice (XLA aliases the buffer in place), and a
+    ``dynamic-slice`` reads only its result — counting whole operands
+    would overcount a 4096-step scan body by ~1000x.
+
+    * raw dynamic-slice / slice / gather: 2 x result bytes;
+    * raw dynamic-update-slice: 2 x update-operand bytes;
+    * fusion: per-parameter usage analysis of the fused computation —
+      a parameter consumed *only* by slice ops contributes the slice
+      bytes, a parameter that is the in-place target of a
+      dynamic-update-slice contributes the update bytes, anything else
+      contributes its full size; the fusion result contributes the DUS
+      update size when the root is an in-place update, else its size.
+    """
+    op = inst.op
+    result = _shape_bytes(inst.shape)
+    opnames = _operand_names(inst.rest)
+    opbytes = [
+        _shape_bytes(comp.instrs[o].shape) if o in comp.instrs else 0
+        for o in opnames
+    ]
+
+    if op in _SLICE_OPS:
+        return 2.0 * result
+    if op == "dynamic-update-slice":
+        upd = opbytes[1] if len(opbytes) > 1 else result
+        return 2.0 * min(upd, result)
+    if op != "fusion":
+        return result + sum(opbytes)
+
+    called = _called_comp(inst.rest, "calls")
+    sub = comps.get(called) if called else None
+    if sub is None:
+        return result + sum(opbytes)
+
+    # signature params in positional order = fusion operand order
+    params = [n for n in sub.instrs if sub.instrs[n].op == "parameter"]
+    pset = set(params)
+    sliced: dict[str, float] = {p: 0.0 for p in params}
+    full_use: dict[str, bool] = {p: False for p in params}
+    dus_target: set[str] = set()
+    dus_update_bytes = 0.0
+    result_is_dus = False
+    result_dims = _shape_dims(inst.shape)
+    # view chains (convert/bitcast/reshape/... incl. the CPU bf16->f32
+    # legalisation converts) are transparent: usage is attributed to the
+    # root parameter they alias.
+    alias: dict[str, str] = {}
+
+    def root_of(name: str) -> str | None:
+        r = alias.get(name, name)
+        return r if r in pset else None
+
+    for iname in sub.order:
+        ii = sub.instrs[iname]
+        ops_i = _operand_names(ii.rest)
+        if ii.op in _VIEW_OPS and len(ops_i) == 1:
+            r = root_of(ops_i[0])
+            if r is not None:
+                alias[iname] = r
+                continue
+        if ii.op == "dynamic-update-slice":
+            upd = ops_i[1] if len(ops_i) > 1 else None
+            if upd and upd in sub.instrs:
+                dus_update_bytes += _shape_bytes(sub.instrs[upd].shape)
+            elif upd and alias.get(upd):
+                dus_update_bytes += _shape_bytes(
+                    sub.instrs[alias[upd]].shape
+                )
+            if _shape_dims(ii.shape) == result_dims:
+                result_is_dus = True
+            for j, o in enumerate(ops_i):
+                r = root_of(o)
+                if r is None:
+                    continue
+                if j == 0:
+                    dus_target.add(r)
+                elif j == 1:
+                    full_use[r] = True  # update read in full
+            # the dus result may feed further converts: make it alias the
+            # in-place target so downstream uses don't re-count it
+            if ops_i and root_of(ops_i[0]):
+                alias[iname] = root_of(ops_i[0])
+            continue
+        for o in ops_i:
+            r = root_of(o)
+            if r is None:
+                continue
+            if ii.op in _SLICE_OPS:
+                sliced[r] += 2.0 * _shape_bytes(ii.shape)
+            else:
+                full_use[r] = True
+
+    # pure-convert fusion: XLA:CPU's bf16->f32 dot legalisation; does not
+    # exist in a TPU lowering of a bf16 model.
+    body_ops = {
+        sub.instrs[n].op for n in sub.order
+    } - {"parameter", "constant", "bitcast", "reshape", "copy"}
+    if bf16_native and body_ops <= {"convert"} and "f32[" in inst.shape:
+        return 0.0
+
+    result_elems = 1
+    for d in result_dims:
+        result_elems *= d
+    traffic = 0.0
+    for p, ob in zip(params, opbytes):
+        p_elems = 1
+        for d in _shape_dims(sub.instrs[p].shape if p in sub.instrs else ""):
+            p_elems *= d
+        same_size = result_elems > 1 and p_elems == result_elems
+        if p in dus_target or (result_is_dus and same_size):
+            traffic += 0.0  # aliased in-place buffer (however consumed)
+        elif full_use[p]:
+            traffic += ob
+        elif sliced[p]:
+            traffic += min(sliced[p], ob)
+        # untouched param: 0
+    traffic += dus_update_bytes if result_is_dus else result
+    return traffic
+
+
+def analyze_hlo(text: str, *, bf16_native: bool = False) -> HloStats:
+    """``bf16_native``: XLA:CPU cannot execute bf16 dots, so its
+    legalisation converts dot inputs to f32 *before* SPMD collectives —
+    weight all-gathers and dot-adjacent all-reduces appear at twice their
+    TPU width (verified with a minimal FSDP matmul).  With this flag, f32
+    collectives whose op_name metadata stems from a dot_general are
+    counted at bf16 width, matching the TPU-native lowering of a bf16
+    model.  Raw bytes remain available via bf16_native=False.
+    """
+    comps, entry = _parse(text)
+    stats = HloStats()
+    if entry is None:
+        return stats
+
+    flop_memo: dict[str, tuple[float, int]] = {}
+
+    def dot_flops(comp: _Comp, inst: _Instr) -> float:
+        result_elems = 1
+        for d in _shape_dims(inst.shape):
+            result_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.rest)
+        cdims = (
+            [int(x) for x in m.group(1).split(",") if x] if m else []
+        )
+        ops = _operand_names(inst.rest)
+        contract = 1
+        if ops and ops[0] in comp.instrs:
+            lhs_dims = _shape_dims(comp.instrs[ops[0]].shape)
+            for c in cdims:
+                if c < len(lhs_dims):
+                    contract *= lhs_dims[c]
+        return 2.0 * result_elems * contract
+
+    def fusion_flops(comp_name: str) -> tuple[float, int]:
+        """flops of dots inside a fusion/call computation (mult 1)."""
+        if comp_name in flop_memo:
+            return flop_memo[comp_name]
+        comp = comps.get(comp_name)
+        if comp is None:
+            return (0.0, 0)
+        total, n = 0.0, 0
+        for iname in comp.order:
+            inst = comp.instrs[iname]
+            if inst.op == "dot":
+                total += dot_flops(comp, inst)
+                n += 1
+            elif inst.op in ("fusion", "call", "map"):
+                c = _called_comp(inst.rest, "calls") or _called_comp(
+                    inst.rest, "to_apply"
+                )
+                if c:
+                    f, k = fusion_flops(c)
+                    total += f
+                    n += k
+        flop_memo[comp_name] = (total, n)
+        return total, n
+
+    def walk(comp_name: str, mult: float, in_timescan: bool = False):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for iname in comp.order:
+            inst = comp.instrs[iname]
+            op = inst.op
+            if op == "while":
+                tm = _TRIP_RE.search(inst.rest)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    stats.unknown_trip_whiles += 1
+                body = _called_comp(inst.rest, "body")
+                if body:
+                    walk(
+                        body,
+                        mult * trips,
+                        in_timescan or trips >= TIMESCAN_TRIPS,
+                    )
+                continue
+            if op in ("call", "custom-call") and op == "call":
+                c = _called_comp(inst.rest, "to_apply")
+                if c:
+                    walk(c, mult)
+                continue
+            if op == "conditional":
+                # count the largest branch (upper bound)
+                m = re.search(
+                    r"(?:branch_computations|true_computation)=\{?([^}]+)\}?",
+                    inst.rest,
+                )
+                continue  # branches negligible in this repo
+            # collectives
+            kind = next(
+                (
+                    k
+                    for k in _COLLECTIVES
+                    if op == k or op == k + "-start"
+                ),
+                None,
+            )
+            if kind is not None:
+                result_bytes = _shape_bytes(inst.shape)
+                if (
+                    bf16_native
+                    and "dot_general" in inst.rest
+                    and "f32[" in inst.shape
+                    and "bf16[" not in inst.shape
+                ):
+                    result_bytes *= 0.5  # TPU keeps these bf16
+                g = _group_size(inst.rest)
+                if kind == "all-reduce":
+                    wire = 2.0 * result_bytes * (g - 1) / g
+                elif kind == "all-gather":
+                    wire = result_bytes * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    wire = result_bytes * (g - 1)
+                elif kind == "all-to-all":
+                    wire = result_bytes * (g - 1) / g
+                else:
+                    wire = float(result_bytes)
+                stats.collectives[kind]["bytes"] += wire * mult
+                stats.collectives[kind]["count"] += mult
+                stats.collective_bytes += wire * mult
+                # collectives also move HBM bytes
+                stats.memory_bytes += result_bytes * mult
+                continue
+            # flops
+            if op == "dot":
+                stats.flops += dot_flops(comp, inst) * mult
+                stats.dots += 1
+            elif op in ("fusion", "map"):
+                c = _called_comp(inst.rest, "calls") or _called_comp(
+                    inst.rest, "to_apply"
+                )
+                if c:
+                    f, k = fusion_flops(c)
+                    stats.flops += f * mult
+                    stats.dots += k
+            # memory traffic at fusion boundaries
+            if op in _SKIP_MEM_OPS:
+                continue
+            nbytes = (
+                _instr_mem_bytes(comp, inst, comps, bf16_native=bf16_native)
+                * mult
+            )
+            stats.memory_bytes += nbytes
+            if _is_attn_tagged(inst.rest):
+                stats.attn_memory_bytes += nbytes
+                if op == "dot":
+                    # flash replacement: q/k/v/o streams, not the S x S
+                    # scores (= the largest tensor of the dot)
+                    sizes = [_shape_bytes(inst.shape)] + [
+                        _shape_bytes(comp.instrs[o].shape)
+                        for o in _operand_names(inst.rest)
+                        if o in comp.instrs
+                    ]
+                    stats.attn_io_bytes += (sum(sizes) - max(sizes)) * mult
+            if in_timescan:
+                stats.timescan_memory_bytes += nbytes
+                # slice I/O = what a fused VMEM kernel must still move
+                if op in _SLICE_OPS or op == "dynamic-update-slice":
+                    stats.timescan_io_bytes += nbytes
+                elif op == "fusion":
+                    called = _called_comp(inst.rest, "calls")
+                    sub = comps.get(called) if called else None
+                    if sub is not None:
+                        io = 0.0
+                        for jn in sub.order:
+                            ji = sub.instrs[jn]
+                            if ji.op in _SLICE_OPS or ji.op == (
+                                "dynamic-update-slice"
+                            ):
+                                io += 2.0 * (
+                                    _shape_bytes(ji.shape)
+                                    if ji.op != "dynamic-update-slice"
+                                    else min(
+                                        (
+                                            _shape_bytes(
+                                                sub.instrs[o].shape
+                                            )
+                                            for o in _operand_names(ji.rest)[1:2]
+                                            if o in sub.instrs
+                                        ),
+                                        default=0,
+                                    )
+                                )
+                        stats.timescan_io_bytes += min(io * mult, nbytes)
+
+    walk(entry, 1.0)
+    return stats

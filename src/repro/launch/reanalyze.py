@@ -1,0 +1,49 @@
+"""Re-derive roofline terms from saved dry-run HLO (no recompilation).
+
+The dry-run saves each cell's optimized per-device HLO as
+``reports/dryrun/<cell>.hlo.gz``; analyzer improvements (trip-count
+handling, slice aliasing) can be re-applied to all 66 cells in seconds:
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+
+from __future__ import annotations
+
+import gzip
+import json
+from pathlib import Path
+
+from ..configs import SHAPES, get_config
+from . import roofline as rl
+
+REPORTS = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+def main() -> None:
+    n = 0
+    for jf in sorted(REPORTS.glob("*.json")):
+        hf = jf.with_suffix("").with_suffix("")  # strip .json
+        hf = REPORTS / (jf.stem + ".hlo.gz")
+        if not hf.exists():
+            continue
+        rec = json.loads(jf.read_text())
+        if not rec.get("ok"):
+            continue
+        with gzip.open(hf, "rt") as fh:
+            hlo = fh.read()
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        roof = rl.analyze(
+            cost=rec.get("cost", {}),
+            hlo_text=hlo,
+            n_chips=rec["n_chips"],
+            model_flops_total=rl.model_flops(cfg, shape),
+        )
+        rec["roofline"] = roof.to_dict()
+        jf.write_text(json.dumps(rec, indent=2, default=str))
+        n += 1
+    print(f"reanalyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

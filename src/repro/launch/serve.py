@@ -1,0 +1,94 @@
+"""Batched serving driver: prefill (chunked) + cached greedy decode.
+
+A minimal production shape: requests are batched, the prompt is prefilled
+token-group-wise through ``decode_step`` (filling the KV/state caches),
+then decoded greedily.  Works for every decoder arch including the
+hybrid/SSM families (their caches are states, not KV).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, reduced
+from ..models import build_model
+from .steps import make_policy, make_serve_step
+
+
+def serve_batch(
+    model,
+    params,
+    prompts: jnp.ndarray,
+    *,
+    gen_len: int,
+    max_len: int | None = None,
+    batch_extras: dict | None = None,
+):
+    """prompts: (B, P) int32. Returns (B, gen_len) generated tokens."""
+    B, P = prompts.shape
+    max_len = max_len or (P + gen_len)
+    cache = model.init_decode(params, B, max_len=max_len, batch=batch_extras)
+    step = jax.jit(model.decode_step)
+
+    logits = None
+    for t in range(P):  # prefill via teacher forcing (cache fill)
+        logits, cache = step(params, cache, prompts[:, t : t + 1])
+    out = []
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    for _ in range(gen_len):
+        out.append(tok)
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg, make_policy(cfg, None))
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+    extras = None
+    if cfg.encoder_layers:
+        extras = {
+            "frames": jax.random.normal(
+                jax.random.PRNGKey(2), (args.batch, 16, cfg.d_model)
+            ).astype(jnp.dtype(cfg.dtype))
+        }
+    t0 = time.time()
+    gen = serve_batch(
+        model, params, prompts, gen_len=args.gen, batch_extras=extras
+    )
+    dt = time.time() - t0
+    toks = args.batch * (args.prompt_len + args.gen)
+    print(
+        f"generated {gen.shape} tokens; {toks/dt:.1f} tok/s total "
+        f"({dt:.2f}s wall)"
+    )
+    print(np.asarray(gen[:2]))
+
+
+if __name__ == "__main__":
+    main()

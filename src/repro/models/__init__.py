@@ -1,0 +1,4 @@
+from .model import Model, build_model
+from .sharding import ShardingPolicy
+
+__all__ = ["Model", "build_model", "ShardingPolicy"]

@@ -1,0 +1,215 @@
+"""Shared layer primitives: norms, MLPs, embeddings, RoPE / M-RoPE."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "softcap",
+    "glu_mlp",
+    "init_glu_mlp",
+    "rope_angles",
+    "apply_rope",
+    "init_dense",
+    "dense",
+]
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# --- mixed-precision backward for projections --------------------------------
+#
+# The cross-entropy produces f32 cotangents; without intervention XLA
+# converts bf16 weights to f32 *before* the FSDP all-gather in the
+# transposed dots, doubling per-layer collective and HBM bytes (measured
+# on qwen2-72b train: f32[8192,9504] lm-head gathers).  ``mixed_bwd``
+# casts incoming cotangents to the weight dtype so backward dots (and
+# the weight gathers feeding them) run in bf16, with f32 accumulation
+# preserved via preferred_element_type.  Enabled per-model by the
+# ``bf16_bwd`` config lever (hillclimb; default off = naive baseline).
+
+_MIXED_BWD: list[bool] = [False]
+
+
+class mixed_bwd:
+    """Context manager enabling bf16-backward projections (trace-time)."""
+
+    def __init__(self, enabled: bool):
+        self.enabled = bool(enabled)
+
+    def __enter__(self):
+        self.prev = _MIXED_BWD[0]
+        _MIXED_BWD[0] = self.enabled
+        return self
+
+    def __exit__(self, *exc):
+        _MIXED_BWD[0] = self.prev
+        return False
+
+
+@jax.custom_vjp
+def _mdot(x, w):
+    return jnp.einsum(
+        "...d,df->...f", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def _mdot_fwd(x, w):
+    return _mdot(x, w), (x, w)
+
+
+def _mdot_bwd(res, g):
+    x, w = res
+    g16 = g.astype(w.dtype)
+    dx = jnp.einsum(
+        "...f,df->...d", g16, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    dw = jnp.einsum(
+        "...d,...f->df", x, g16, preferred_element_type=jnp.float32
+    ).astype(w.dtype)
+    return dx, dw
+
+
+_mdot.defvjp(_mdot_fwd, _mdot_bwd)
+
+
+@jax.custom_vjp
+def _mdot_f32out(x, w):
+    return jnp.einsum(
+        "...d,df->...f", x, w, preferred_element_type=jnp.float32
+    )
+
+
+def _mdot_f32out_fwd(x, w):
+    return _mdot_f32out(x, w), (x, w)
+
+
+_mdot_f32out.defvjp(_mdot_f32out_fwd, _mdot_bwd)
+
+
+def head_dot(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Projection with f32 output (logits) and optional bf16 backward."""
+    if _MIXED_BWD[0] and x.dtype == w.dtype:
+        return _mdot_f32out(x, w)
+    return jnp.einsum(
+        "...d,df->...f", x, w, preferred_element_type=jnp.float32
+    )
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    if _MIXED_BWD[0] and x.dtype == w.dtype:
+        y = _mdot(x, w)
+    else:
+        y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_glu_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d_model, d_ff, dtype),
+        "w_up": init_dense(k2, d_model, d_ff, dtype),
+        "w_down": init_dense(k3, d_ff, d_model, dtype),
+    }
+
+
+def glu_mlp(params, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = _ACTS[act](dense(x, params["w_gate"])) * dense(x, params["w_up"])
+    return dense(h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (+ qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(
+    positions: jax.Array, head_dim: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for positions (..., S) -> (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freq = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    mrope_sections: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Rotate q/k: x (B, S, H, hd); positions (B, S) or (3, B, S) M-RoPE.
+
+    M-RoPE (qwen2-vl): the head_dim/2 frequency slots are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  For text tokens all three streams coincide.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    if mrope_sections is not None:
+        if positions.ndim == 2:  # text-only: same positions for t/h/w
+            positions = jnp.broadcast_to(positions, (3,) + positions.shape)
+        cos_parts, sin_parts = [], []
+        start = 0
+        for sec, pos in zip(mrope_sections, positions):
+            freq = 1.0 / (
+                theta ** (jnp.arange(start, start + sec, dtype=jnp.float32) / half)
+            )
+            ang = pos.astype(jnp.float32)[..., None] * freq
+            cos_parts.append(jnp.cos(ang))
+            sin_parts.append(jnp.sin(ang))
+            start += sec
+        cos = jnp.concatenate(cos_parts, axis=-1)[..., None, :]
+        sin = jnp.concatenate(sin_parts, axis=-1)[..., None, :]
+    else:
+        cos, sin = rope_angles(positions, hd, theta)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

@@ -1,0 +1,154 @@
+"""Mamba (S6) selective state-space mixer — the jamba hybrid's workhorse.
+
+Full-sequence mode runs the selective scan with ``lax.scan`` over time
+(memory-light, compile-friendly for the 512-device dry-run); single-token
+decode is an O(1) state update.  The VMEM-tiled chunked formulation lives
+in ``repro.kernels.mamba_scan`` (TPU target; this module is its oracle).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import dense, init_dense
+
+__all__ = ["init_mamba", "mamba_full", "mamba_decode", "init_mamba_cache"]
+
+
+def _dims(cfg):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or math.ceil(cfg.d_model / 16)
+    return m, d_inner, dt_rank
+
+
+def init_mamba(key, cfg, dtype):
+    m, d_inner, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation of A
+    A = jnp.tile(
+        jnp.arange(1, m.d_state + 1, dtype=jnp.float32)[None, :],
+        (d_inner, 1),
+    )
+    return {
+        "w_in": init_dense(ks[0], cfg.d_model, 2 * d_inner, dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (d_inner, m.d_conv)) / math.sqrt(m.d_conv)
+        ).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": init_dense(ks[2], d_inner, dt_rank + 2 * m.d_state, dtype),
+        "w_dt": init_dense(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jax.random.uniform(ks[4], (d_inner,), minval=1e-3, maxval=0.1)
+            )
+            - 1.0
+        ).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": init_dense(ks[5], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _ssm_inputs(params, xz, cfg):
+    """Shared projections: returns (x_conv_in, z, dt, B, C)."""
+    m, d_inner, dt_rank = _dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z
+
+
+def _dt_B_C(params, x, cfg):
+    m, d_inner, dt_rank = _dims(cfg)
+    proj = dense(x, params["x_proj"])
+    dt, B, C = jnp.split(proj, [dt_rank, dt_rank + m.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dense(dt, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    return dt, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def mamba_full(params, u: jax.Array, *, cfg, policy) -> jax.Array:
+    """Full-sequence mamba: u (B, S, D) -> (B, S, D)."""
+    m, d_inner, _ = _dims(cfg)
+    Bsz, S, _ = u.shape
+    xz = dense(u, params["w_in"])
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over time
+    w = params["conv_w"].astype(x.dtype)  # (d_inner, k)
+    pad = jnp.zeros((Bsz, m.d_conv - 1, d_inner), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    x = sum(
+        xp[:, i : i + S, :] * w[:, i][None, None, :]
+        for i in range(m.d_conv)
+    )
+    x = jax.nn.silu(x + params["conv_b"].astype(x.dtype))
+
+    dt, Bmat, Cmat = _dt_B_C(params, x, cfg)  # (B,S,d_in),(B,S,N),(B,S,N)
+    if getattr(cfg, "mamba_bf16_io", False):
+        # stream the selective-scan inputs at bf16 (state math stays f32;
+        # halves the dominant dt/B/C HBM traffic of the jamba train cell)
+        dt = dt.astype(jnp.bfloat16)
+        Bmat = Bmat.astype(jnp.bfloat16)
+        Cmat = Cmat.astype(jnp.bfloat16)
+    A = -jnp.exp(params["A_log"])  # (d_in, N)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (B,d_in),(B,d_in),(B,N),(B,N)
+        dtt = dtt.astype(jnp.float32)
+        Bt, Ct = Bt.astype(jnp.float32), Ct.astype(jnp.float32)
+        dA = jnp.exp(dtt[..., None] * A[None])          # (B,d_in,N)
+        dBx = (dtt * xt.astype(jnp.float32))[..., None] * Bt[:, None, :]
+        state = state * dA + dBx                         # (B,d_in,N)
+        y = jnp.einsum("bdn,bn->bd", state, Ct)
+        return state, y
+
+    state0 = jnp.zeros((Bsz, d_inner, m.d_state), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bmat, 1, 0),
+        jnp.moveaxis(Cmat, 1, 0),
+    )
+    _, ys = lax.scan(
+        step, state0, xs, unroll=getattr(cfg, "scan_unroll", 1)
+    )
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,d_in)
+    y = y + x.astype(jnp.float32) * params["D"][None, None, :]
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    return dense(y, params["w_out"])
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    m, d_inner, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, d_inner), dtype),
+        "state": jnp.zeros((batch, d_inner, m.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params, u, cache, *, cfg, policy):
+    """One-token update: u (B, 1, D) -> ((B, 1, D), new cache)."""
+    m, d_inner, _ = _dims(cfg)
+    xz = dense(u[:, 0], params["w_in"])
+    x, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([cache["conv"], x[:, None]], axis=1)  # (B,k,d)
+    w = params["conv_w"].astype(x.dtype)
+    x = jnp.einsum("bkd,dk->bd", hist, w) + params["conv_b"].astype(x.dtype)
+    x = jax.nn.silu(x)
+    dt, Bt, Ct = _dt_B_C(params, x, cfg)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None])
+    dBx = (dt * x.astype(jnp.float32))[..., None] * Bt[:, None, :]
+    state = cache["state"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", state, Ct)
+    y = y + x.astype(jnp.float32) * params["D"][None]
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    out = dense(y, params["w_out"])[:, None]
+    return out, {"conv": hist[:, 1:], "state": state}

@@ -1,0 +1,172 @@
+"""RWKV6 "Finch" mixer: linear attention with data-dependent decay.
+
+Time-mix recurrence per head (state S in R^{hd x hd}):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_t + diag(u) k_t^T v_t-correction)  [bonus u on current]
+
+with w_t = exp(-exp(decay_t)) produced by a low-rank "lora" from the
+token-shifted input (the data-dependent decay that distinguishes v6).
+Full-seq mode scans over time; decode is O(1).  Channel-mix is the
+squared-relu FFN of the RWKV family.  The chunked VMEM-tiled kernel lives
+in ``repro.kernels.rwkv6_scan``; this module is its oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import dense, init_dense
+
+__all__ = ["init_rwkv", "rwkv_full", "rwkv_decode", "init_rwkv_cache"]
+
+LORA_DIM = 32
+
+
+def _heads(cfg):
+    hd = cfg.rwkv_head_size
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv(key, cfg, dtype):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix interpolation coefficients (token shift)
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": init_dense(ks[0], d, d, dtype),
+        "w_k": init_dense(ks[1], d, d, dtype),
+        "w_v": init_dense(ks[2], d, d, dtype),
+        "w_o": init_dense(ks[3], d, d, dtype),
+        # data-dependent decay lora: d -> LORA -> d
+        "decay_a": init_dense(ks[4], d, LORA_DIM, dtype),
+        "decay_b": init_dense(ks[5], LORA_DIM, d, dtype),
+        "decay_bias": jnp.full((d,), -6.0, jnp.float32),
+        "bonus": (jax.random.normal(ks[6], (H, hd)) * 0.1).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _mix(x, prev, mu):
+    """Token shift: lerp between current and previous token."""
+    return x * mu + prev * (1.0 - mu)
+
+
+def _rwkv_inputs(params, x, x_prev, cfg):
+    H, hd = _heads(cfg)
+    r = dense(_mix(x, x_prev, params["mu_r"]), params["w_r"])
+    k = dense(_mix(x, x_prev, params["mu_k"]), params["w_k"])
+    v = dense(_mix(x, x_prev, params["mu_v"]), params["w_v"])
+    wx = _mix(x, x_prev, params["mu_w"])
+    decay = dense(
+        jnp.tanh(dense(wx, params["decay_a"])), params["decay_b"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay + params["decay_bias"]))  # (…, d) in (0,1)
+    return r, k, v, w
+
+
+def _group_norm(x, scale, H, hd, eps=1e-5):
+    """Per-head layer norm of the attention output (RWKV's ln_x)."""
+    shape = x.shape
+    x = x.reshape(*shape[:-1], H, hd).astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x.reshape(shape) * scale).astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def rwkv_full(params, x: jax.Array, *, cfg, policy) -> jax.Array:
+    """Full-sequence time-mix: x (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    r, k, v, w = _rwkv_inputs(params, x, x_prev, cfg)
+
+    def split_heads(t):
+        return t.reshape(B, S, H, hd).astype(jnp.float32)
+
+    r, k, v, w = map(split_heads, (r, k, v, w))
+    u = params["bonus"]  # (H, hd)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # each (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]      # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj", rt, state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, out
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    _, outs = lax.scan(
+        step, state0, xs, unroll=getattr(cfg, "scan_unroll", 1)
+    )
+    y = jnp.moveaxis(outs, 0, 1).reshape(B, S, D)
+    y = _group_norm(y, params["ln_x_scale"], H, hd)
+    return dense(y.astype(x.dtype), params["w_o"])
+
+
+def init_rwkv_cache(cfg, batch: int, dtype):
+    H, hd = _heads(cfg)
+    return {
+        "x_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def init_rwkv_cm(key, cfg, dtype):
+    """Channel-mix (RWKV FFN): squared-relu with receptance gate."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_up": init_dense(ks[0], d, cfg.d_ff, dtype),
+        "w_down": init_dense(ks[1], cfg.d_ff, d, dtype),
+        "w_r": init_dense(ks[2], d, d, dtype),
+    }
+
+
+def rwkv_cm_full(params, x, *, cfg):
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    k = dense(_mix(x, x_prev, params["mu_k"]), params["w_up"])
+    kv = dense(jnp.square(jax.nn.relu(k)), params["w_down"])
+    r = jax.nn.sigmoid(dense(_mix(x, x_prev, params["mu_r"]), params["w_r"]))
+    return r * kv
+
+
+def rwkv_cm_decode(params, x, x_prev, *, cfg):
+    """x (B, 1, D); x_prev (B, D) -> (out, new x_prev)."""
+    xt = x[:, 0]
+    k = dense(_mix(xt, x_prev, params["mu_k"]), params["w_up"])
+    kv = dense(jnp.square(jax.nn.relu(k)), params["w_down"])
+    r = jax.nn.sigmoid(dense(_mix(xt, x_prev, params["mu_r"]), params["w_r"]))
+    return (r * kv)[:, None], xt
+
+
+def rwkv_decode(params, x, cache, *, cfg, policy):
+    """One-token time-mix: x (B, 1, D) -> ((B, 1, D), cache)."""
+    B = x.shape[0]
+    H, hd = _heads(cfg)
+    xt = x[:, 0]
+    r, k, v, w = _rwkv_inputs(params, xt, cache["x_prev"], cfg)
+    r, k, v, w = (
+        t.reshape(B, H, hd).astype(jnp.float32) for t in (r, k, v, w)
+    )
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum(
+        "bhi,bhij->bhj", r, cache["state"] + params["bonus"][None, :, :, None] * kv
+    )
+    state = w[..., :, None] * cache["state"] + kv
+    y = _group_norm(out.reshape(B, -1), params["ln_x_scale"], H, hd)
+    y = dense(y.astype(x.dtype), params["w_o"])[:, None]
+    return y, {"x_prev": xt, "state": state}

@@ -1,0 +1,10 @@
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm
+from .schedules import make_schedule
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "make_schedule",
+]

@@ -1,0 +1,44 @@
+"""LR schedules: cosine, constant, and WSD (minicpm's warmup-stable-decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["make_schedule"]
+
+
+def make_schedule(cfg):
+    """cfg: OptimizerConfig -> step -> lr (traced-friendly)."""
+    warm, base = cfg.warmup_steps, cfg.lr
+
+    if cfg.schedule == "constant":
+        def sched(step):
+            frac = jnp.minimum(step / jnp.maximum(warm, 1), 1.0)
+            return base * frac
+        return sched
+
+    if cfg.schedule == "cosine":
+        decay = jnp.maximum(cfg.decay_steps, 1)
+
+        def sched(step):
+            wfrac = jnp.minimum(step / jnp.maximum(warm, 1), 1.0)
+            t = jnp.clip((step - warm) / decay, 0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+            return base * wfrac * (0.1 + 0.9 * cos)
+        return sched
+
+    if cfg.schedule == "wsd":
+        # MiniCPM WSD: linear warmup, long stable plateau, sharp
+        # exponential-ish decay tail (arXiv:2404.06395 §4).
+        stable = jnp.maximum(cfg.stable_steps, 1)
+        decay = jnp.maximum(cfg.decay_steps, 1)
+
+        def sched(step):
+            wfrac = jnp.minimum(step / jnp.maximum(warm, 1), 1.0)
+            in_decay = step > (warm + stable)
+            t = jnp.clip((step - warm - stable) / decay, 0.0, 1.0)
+            tail = 0.5 ** (t * 10.0)  # ~3 decades over the decay window
+            return base * wfrac * jnp.where(in_decay, tail, 1.0)
+        return sched
+
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")

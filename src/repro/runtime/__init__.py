@@ -1,0 +1,3 @@
+from .fault import ResumableLoop, StragglerMonitor, elastic_remesh
+
+__all__ = ["ResumableLoop", "StragglerMonitor", "elastic_remesh"]

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests on reduced same-family configs (CPU).
+
+For every assigned arch: one forward pass, one loss+grad step, and one
+cached decode step — asserting shapes, finiteness, and (for decode)
+agreement between the cached path and the full forward.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import build_model
+
+ALL = sorted(ARCHS)
+
+
+def _batch(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.frontend == "vision_patches":
+        batch["embeds"] = (
+            jax.random.normal(ks[0], (B, S, cfg.d_model)) * 0.02
+        )
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)
+        )
+        batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(ks[2], (B, 12, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = dataclasses.replace(reduced(ARCHS[name]), dtype="float32")
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[name] = (cfg, model, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes_and_finite(built, name):
+    cfg, model, params = built(name)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    hidden, aux = jax.jit(model.apply)(params, batch)
+    B = 2
+    assert hidden.shape == (B, 16, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_step_grads_finite(built, name):
+    cfg, model, params = built(name)
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+    # at least 99% of leaves receive nonzero gradient signal
+    nonzero = sum(float(np.abs(np.asarray(g)).sum()) > 0 for g in leaves)
+    assert nonzero / len(leaves) > 0.9, f"{nonzero}/{len(leaves)} leaves live"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_decode_matches_full_forward(built, name):
+    """Teacher-forced cached decode must reproduce the full forward's
+    logits position by position (the KV/state-cache correctness test)."""
+    cfg, model, params = built(name)
+    B, S = 2, 8
+    batch = _batch(cfg, jax.random.PRNGKey(3), B=B, S=S)
+    full_logits = jax.jit(model.logits)(params, batch)
+
+    cache = model.init_decode(params, B, max_len=S, batch=batch)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        if "embeds" in batch:
+            tok = batch["embeds"][:, t : t + 1]
+        else:
+            tok = batch["tokens"][:, t : t + 1]
+        logits, cache = step(params, cache, tok)
+        outs.append(np.asarray(logits[:, 0]))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        dec, np.asarray(full_logits), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_gemma2_window_masks_differ():
+    """Local sublayer must attend differently from global at long range."""
+    cfg = dataclasses.replace(
+        reduced(ARCHS["gemma2-27b"]), dtype="float32", sliding_window=4
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 12
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    h1, _ = model.apply(params, {"tokens": tok})
+    # zero out the early context: only positions >= S-window can matter for
+    # the last position in a pure local stack; with global layers present
+    # the output at the last position must change.
+    tok2 = tok.at[:, :4].set(0)
+    h2, _ = model.apply(params, {"tokens": tok2})
+    assert not np.allclose(np.asarray(h1[:, -1]), np.asarray(h2[:, -1]))

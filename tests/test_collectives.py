@@ -1,0 +1,65 @@
+"""Wrapper running the multi-device collective checks in a subprocess.
+
+The checks need >1 XLA CPU device, which requires setting XLA_FLAGS before
+jax is first imported; the main pytest process keeps the default single
+device (per the dry-run isolation rule), so these run out-of-process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_SCRIPT = Path(__file__).parent / "_multidevice_checks.py"
+_SRC = str(Path(__file__).parent.parent / "src")
+
+
+@pytest.fixture(scope="module")
+def check_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_CHECK_DEVICES"] = "16"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(_SCRIPT)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [
+        l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON:")
+    ]
+    assert line, proc.stdout[-4000:]
+    return json.loads(line[-1][len("RESULTS_JSON:") :])
+
+
+_EXPECTED = [
+    "correct_nap",
+    "correct_rd",
+    "correct_smp",
+    "correct_psum",
+    "correct_ring",
+    "correct_rabenseifner",
+    "correct_nap_max",
+    "correct_nap_min",
+    "hlo_permute_counts",
+    "correct_nap_nonpower_8x2",
+    "correct_nap_multiaxis",
+    "grad_sync_nap_mean",
+    "grad_sync_compressed",
+    "dp_train_nap_equals_psum",
+    "nap_allgather",
+    "nap_reduce_scatter",
+    "nap_allreduce_large",
+]
+
+
+@pytest.mark.parametrize("name", _EXPECTED)
+def test_multidevice_check(check_results, name):
+    assert name in check_results, f"check {name} did not run"
+    assert check_results[name]["ok"], check_results[name]

@@ -1,0 +1,201 @@
+"""Property + example tests for the NAP schedule math (paper §III)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import napalg
+
+
+def _ref(values, op):
+    red = {
+        "sum": np.sum,
+        "max": np.max,
+        "min": np.min,
+        "prod": np.prod,
+    }[op](values, axis=0)
+    return np.broadcast_to(red, values.shape)
+
+
+# ---------------------------------------------------------------------------
+# correctness: NAP schedule == reduction oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+@pytest.mark.parametrize(
+    "n_nodes,ppn",
+    [
+        (1, 4),
+        (2, 2),
+        (4, 4),       # single inter-node step, n == ppn (Fig. 6)
+        (16, 4),      # two steps, power of ppn (Fig. 7)
+        (64, 4),      # three steps
+        (12, 4),      # n divisible by ppn, non-power (Fig. 8)
+        (14, 4),      # ragged subgroups + donors (Fig. 9)
+        (5, 4),
+        (7, 3),
+        (9, 2),
+        (27, 3),
+        (31, 16),
+        (33, 16),
+    ],
+)
+def test_nap_matches_oracle(n_nodes, ppn, op):
+    sched = napalg.build_nap_schedule(n_nodes, ppn)
+    rng = np.random.default_rng(n_nodes * 100 + ppn)
+    values = rng.normal(size=(n_nodes * ppn, 3))
+    got = napalg.simulate_allreduce(sched, values, op=op)
+    np.testing.assert_allclose(got, _ref(values, op), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=120, deadline=None)
+@given(
+    n_nodes=st.integers(min_value=1, max_value=40),
+    ppn=st.integers(min_value=2, max_value=16),
+    op=st.sampled_from(["sum", "max", "min"]),
+)
+def test_nap_matches_oracle_property(n_nodes, ppn, op):
+    sched = napalg.build_nap_schedule(n_nodes, ppn)
+    rng = np.random.default_rng(n_nodes * 1000 + ppn)
+    values = rng.normal(size=(n_nodes * ppn, 2))
+    got = napalg.simulate_allreduce(sched, values, op=op)
+    np.testing.assert_allclose(got, _ref(values, op), rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# the paper's headline claim: log_ppn(n) inter-node steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n_nodes,ppn,expected_steps",
+    [
+        (16, 16, 1),    # paper: "16 nodes with 16 ppn requires one step"
+        (4096, 16, 3),  # paper: "4096 nodes, 16 ppn requires three steps"
+        (4, 4, 1),
+        (16, 4, 2),
+        (64, 4, 3),
+        (12, 4, 2),     # Fig. 8: non-power pays the next power's steps
+        (14, 4, 2),     # Fig. 9
+        (2, 16, 1),
+        (1024, 2, 10),  # ppn=2 degenerates to recursive doubling counts
+    ],
+)
+def test_internode_step_count(n_nodes, ppn, expected_steps):
+    sched = napalg.build_nap_schedule(n_nodes, ppn)
+    assert sched.num_internode_steps == expected_steps
+    assert napalg.nap_num_steps(n_nodes, ppn) == expected_steps
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    n_nodes=st.integers(min_value=2, max_value=300),
+    ppn=st.integers(min_value=2, max_value=32),
+)
+def test_step_count_is_log_ppn(n_nodes, ppn):
+    sched = napalg.build_nap_schedule(n_nodes, ppn)
+    expected = max(1, math.ceil(math.log(n_nodes) / math.log(ppn) - 1e-12))
+    assert sched.num_internode_steps == expected
+
+
+def test_power_of_ppn_message_bound():
+    """For power-of-ppn node counts, every chip sends exactly <= log_ppn(n)
+    inter-node messages and there are no donor rounds."""
+    for n_nodes, ppn in [(4, 4), (16, 4), (64, 4), (16, 16), (256, 16)]:
+        sched = napalg.build_nap_schedule(n_nodes, ppn)
+        assert sched.max_messages_per_chip() <= sched.num_internode_steps
+        for step in sched.steps:
+            assert len(step.rounds) == 1  # no donor overflow
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_nodes=st.integers(min_value=2, max_value=120),
+    ppn=st.integers(min_value=2, max_value=16),
+)
+def test_rounds_are_valid_permutations(n_nodes, ppn):
+    """Each ppermute round must be a partial permutation: a chip appears at
+    most once as src and at most once as dst."""
+    sched = napalg.build_nap_schedule(n_nodes, ppn)
+    for step in sched.steps:
+        for rnd in step.rounds:
+            srcs = [s for s, _ in rnd]
+            dsts = [d for _, d in rnd]
+            assert len(srcs) == len(set(srcs))
+            assert len(dsts) == len(set(dsts))
+
+
+# ---------------------------------------------------------------------------
+# §III.A figure examples
+# ---------------------------------------------------------------------------
+
+
+def test_fig9_p14_receives_from_donor():
+    """14 nodes, ppn=4 (Fig. 9): with balanced subgroups (4,4,3,3), node 3's
+    rank-2 chip (P14) has no partner at position 3 of subgroup 2 and must
+    receive from subgroup 2's idle rank-2 chip (P34 = node 8)."""
+    sched = napalg.build_nap_schedule(14, 4)
+    last = sched.steps[-1]
+    sizes = [len(sg) for sg in last.groups[0]]
+    assert sorted(sizes, reverse=True) == [4, 4, 3, 3]
+    msgs = last.messages
+    # P14 = chip 14 must receive from an idle (rank == subgroup) chip of
+    # the subgroup it is missing.
+    donors = [src for src, dst in msgs if dst == 14]
+    assert donors, "P14 must receive a donated partial"
+    (donor,) = donors
+    donor_node, donor_rank = divmod(donor, 4)
+    # the donor is the idle chip of its subgroup: rank == subgroup index
+    subgroup_of = {}
+    for gi, sg in enumerate(last.groups[0]):
+        for node in sg:
+            subgroup_of[node] = gi
+    assert donor_rank == subgroup_of[donor_node]
+    assert donor == 34  # node 8, local rank 2 — exactly the paper's P34
+
+
+def test_fig8_divisible_but_not_power():
+    """12 nodes, ppn 4 (Fig. 8): final step reduces over 3 subgroups; all
+    rank-3 chips idle in that step (no 4th subgroup)."""
+    sched = napalg.build_nap_schedule(12, 4)
+    assert sched.num_internode_steps == 2
+    last = sched.steps[-1]
+    assert len(last.groups[0]) == 3
+    for src, dst in last.messages:
+        assert src % 4 != 3 and dst % 4 != 3
+
+
+# ---------------------------------------------------------------------------
+# baseline schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_nodes,ppn", [(4, 4), (8, 16), (5, 4), (14, 4), (3, 5)])
+def test_rd_and_smp_message_counts(n_nodes, ppn):
+    rd = napalg.build_rd_schedule(n_nodes, ppn)
+    smp = napalg.build_smp_schedule(n_nodes, ppn)
+    nap = napalg.build_nap_schedule(n_nodes, ppn)
+    p = n_nodes * ppn
+    # RD: ceil(log2 p) (+2 fold steps for non-powers) total steps
+    pow2 = 1 << (p.bit_length() - 1)
+    expected = int(math.log2(pow2)) + (2 if p != pow2 else 0)
+    assert len(rd.steps) == expected
+    # node-aware claim: NAP max inter-node msgs/chip <= RD's and <= SMP's
+    rd_max = rd.max_internode_messages_per_chip()
+    smp_max = smp.max_internode_messages_per_chip()
+    nap_max = nap.max_messages_per_chip()
+    assert nap_max <= rd_max or n_nodes == 1
+    assert nap_max <= smp_max or n_nodes == 1
+
+
+def test_headline_message_reduction():
+    """Paper abstract: inter-node messages drop log2(n) -> log_ppn(n)."""
+    nap = napalg.build_nap_schedule(4096, 16)
+    rd = napalg.build_rd_schedule(4096, 16)
+    smp = napalg.build_smp_schedule(4096, 16)
+    assert napalg.message_counts(nap)["max_per_chip"] == 3
+    assert rd.max_internode_messages_per_chip() == 12
+    assert smp.max_internode_messages_per_chip() == 12
