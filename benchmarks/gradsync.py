@@ -8,8 +8,9 @@ under the TPU max-rate parameters, for a realistic bucket-size mix:
     norm/bias bucket (the paper's core regime),
   * bandwidth-bound large payloads: fused parameter-gradient buckets.
 
-Compares pure-RD, pure-SMP, pure-NAP and the paper-faithful "auto" switch
-(NAP under 2 KiB, pod-local reduce + RS/AG above).
+Compares pure-RD, pure-SMP, pure-NAP, the striped multi-lane MLA path,
+and the model-driven "auto" switch (NAP below the per-grid
+``perf_model.crossover_bytes`` NAP↔MLA crossover, MLA above it).
 """
 
 from __future__ import annotations
@@ -17,6 +18,17 @@ from __future__ import annotations
 from repro.core import perf_model as pm, simulator as sim
 
 P = pm.TPU_V5E_POD
+
+# simulator is per-message; above this the closed forms (Eq 4-6 + MLA) are
+# both faster to evaluate and the regime where they are accurate
+_SIM_LIMIT = 1 << 16
+
+_COSTS = {
+    "rd": pm.cost_rd,
+    "smp": pm.cost_smp,
+    "nap": pm.cost_nap,
+    "mla": pm.cost_mla,
+}
 
 # (name, bytes, count) — a ~100M-param model with fused buckets
 BUCKETS = [
@@ -27,40 +39,25 @@ BUCKETS = [
 ]
 
 
-def _large_cost(s: float, n: int, ppn: int) -> float:
-    """Pod-local reduce + Rabenseifner RS/AG over pods (bandwidth path)."""
-    import math
-
-    intra = (P.alpha_l + P.beta_l * s) * (
-        math.log2(ppn) if ppn > 1 else 0.0
-    )
-    steps = 2 * math.ceil(math.log2(n)) if n > 1 else 0
-    bytes_moved = 2.0 * s * (n - 1) / n
-    inter = steps * P.alpha + bytes_moved / P.R_b
-    return intra + inter + P.gamma * s * 2
+def _bucket_time(algo: str, s: float, n: int, ppn: int) -> float:
+    if s <= _SIM_LIMIT:
+        return sim.simulate_algorithm(algo, n, ppn, s, P)
+    return _COSTS[algo](s, n, ppn, P)
 
 
 def main() -> None:
     rows = []
     for n_pods, ppn in [(2, 16), (8, 16), (64, 16)]:
-        totals = {"rd": 0.0, "smp": 0.0, "nap": 0.0, "auto": 0.0}
+        crossover = pm.crossover_bytes(n_pods, ppn, P, large="mla")
+        totals = {a: 0.0 for a in ["rd", "smp", "nap", "mla", "auto"]}
         for _, s, count in BUCKETS:
-            for algo in ["rd", "smp", "nap"]:
-                if s <= 1 << 16:
-                    t = sim.simulate_algorithm(algo, n_pods, ppn, float(s), P)
-                else:  # simulator is per-message; large buckets use Eq 4-6
-                    t = {
-                        "rd": pm.cost_rd,
-                        "smp": pm.cost_smp,
-                        "nap": pm.cost_nap,
-                    }[algo](float(s), n_pods, ppn, P)
-                totals[algo] += t * count
-            t_auto = (
-                sim.simulate_algorithm("nap", n_pods, ppn, float(s), P)
-                if s <= 2048
-                else _large_cost(float(s), n_pods, ppn)
+            for algo in ["rd", "smp", "nap", "mla"]:
+                totals[algo] += _bucket_time(algo, float(s), n_pods, ppn) * count
+            # model-driven switch: same decision hierarchical_allreduce makes
+            auto_algo = "nap" if s <= crossover else "mla"
+            totals["auto"] += (
+                _bucket_time(auto_algo, float(s), n_pods, ppn) * count
             )
-            totals["auto"] += t_auto * count
         for algo, t in totals.items():
             rows.append(
                 (
@@ -71,11 +68,37 @@ def main() -> None:
             )
         rows.append(
             (
-                f"gradsync_auto_speedup_vs_rd_pods{n_pods}",
-                totals["rd"] / totals["auto"],
-                "size-switched",
+                f"gradsync_crossover_bytes_pods{n_pods}",
+                crossover,
+                "nap<=x<mla",
             )
         )
+        rows.append(
+            (
+                f"gradsync_auto_speedup_vs_rd_pods{n_pods}",
+                totals["rd"] / totals["auto"],
+                "model-switched",
+            )
+        )
+        rows.append(
+            (
+                f"gradsync_mla_speedup_vs_smp_pods{n_pods}",
+                totals["smp"] / totals["mla"],
+                "striped lanes",
+            )
+        )
+        # the tentpole quantity: per-chip inter-node bytes for one 16 MiB
+        # bucket, striped vs single-lane paths
+        s_big = float(16 << 20)
+        for algo in ["rd", "smp", "nap", "mla"]:
+            rows.append(
+                (
+                    f"gradsync_internode_MB_per_chip_{algo}_pods{n_pods}",
+                    sim.internode_bytes_per_chip(algo, n_pods, ppn, s_big)
+                    / (1 << 20),
+                    "16MiB bucket",
+                )
+            )
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
 

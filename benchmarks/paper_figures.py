@@ -47,11 +47,14 @@ def fig11_model_sizes():
             ("rd", pm.cost_rd),
             ("smp", pm.cost_smp),
             ("nap", pm.cost_nap),
+            ("mla", pm.cost_mla),
         ]:
             us = fn(float(s), nodes, PPN, P) * 1e6
             rows.append((f"fig11_model_{algo}_s{s}", us, f"bytes={s}"))
     xo = pm.crossover_bytes(nodes, PPN, P)
     rows.append(("fig11_nap_smp_crossover_bytes", xo, "paper:~2048"))
+    xo_mla = pm.crossover_bytes(nodes, PPN, P, large="mla")
+    rows.append(("fig11_nap_mla_crossover_bytes", xo_mla, "dispatcher"))
     return _emit(rows)
 
 
@@ -87,7 +90,7 @@ def fig14_sim_sizes():
     for s in [8, 64, 512, 2048, 8192, 65536]:
         times = {
             algo: sim.simulate_algorithm(algo, nodes, PPN, float(s), P)
-            for algo in ["rd", "smp", "nap"]
+            for algo in ["rd", "smp", "nap", "mla"]
         }
         for algo, t in times.items():
             rows.append((f"fig14_sim_{algo}_s{s}", t * 1e6, f"bytes={s}"))
@@ -96,6 +99,44 @@ def fig14_sim_sizes():
                 f"fig15_speedup_vs_smp_s{s}",
                 times["smp"] / times["nap"],
                 "nap_wins" if times["nap"] < times["smp"] else "smp_wins",
+            )
+        )
+    return _emit(rows)
+
+
+def fig18_mla_striping():
+    """Beyond-paper: the striped MLA bandwidth path (§VI executed).
+
+    Per-chip inter-node bytes and simulated times for the bandwidth
+    regime: MLA moves ``~2*(s/ppn)*(n-1)/n`` bytes per chip — a ppn-fold
+    drop vs the single-lane SMP-style path — and the modeled NAP↔MLA
+    crossover that drives ``hierarchical_allreduce("auto")``.
+    """
+    rows = []
+    for nodes in [8, 64, 512]:
+        s = float(1 << 20)
+        for algo in ["rd", "smp", "nap", "mla"]:
+            rows.append(
+                (
+                    f"fig18_internode_KB_per_chip_{algo}_n{nodes}",
+                    sim.internode_bytes_per_chip(algo, nodes, PPN, s) / 1024,
+                    "1MiB reduction",
+                )
+            )
+        t_mla = pm.cost_mla(s, nodes, PPN, P)
+        t_smp = pm.cost_smp(s, nodes, PPN, P)
+        rows.append(
+            (
+                f"fig18_mla_speedup_vs_smp_n{nodes}",
+                t_smp / t_mla,
+                f"x{t_smp / t_mla:.2f}",
+            )
+        )
+        rows.append(
+            (
+                f"fig18_crossover_bytes_n{nodes}",
+                pm.crossover_bytes(nodes, PPN, P, large="mla"),
+                "auto switch point",
             )
         )
     return _emit(rows)
@@ -179,5 +220,6 @@ ALL = [
     fig13_speedup,
     fig14_sim_sizes,
     fig16_overhead,
+    fig18_mla_striping,
     table_msgcounts,
 ]

@@ -1,18 +1,87 @@
 """Benchmark runner: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Sections:
-  * paper_figures   — Figs 10-17 + §III message-count tables
+  * paper_figures   — Figs 10-18 + §III message-count tables
   * gradsync        — gradient-sync schedule comparison (training buckets)
   * roofline_report — per-(arch x shape) roofline terms, if dry-run
                       artifacts exist under reports/dryrun/
+
+``--quick`` runs a CPU smoke instead: one NAP shape (latency regime) and
+one MLA shape (bandwidth regime) are *executed* end to end on a virtual
+2x4 device mesh, checked against the NumPy oracle and timed — so perf or
+correctness regressions on the hot path are catchable without hardware.
 """
 
 from __future__ import annotations
 
+import os
 import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def quick_smoke() -> int:
+    """Execute one NAP + one MLA allreduce on a virtual CPU mesh."""
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+    import time
+    from functools import partial
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core import collectives
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    rng = np.random.default_rng(0)
+    failures = 0
+    print("name,us_per_call,derived")
+    for algo, size in [("nap", 8), ("mla", 1 << 16)]:
+        xs = jnp.asarray(rng.normal(size=(8, size)).astype(np.float32))
+        fn = jax.jit(
+            compat.shard_map(
+                partial(
+                    collectives.ALGORITHMS[algo],
+                    inter_axes="pod",
+                    intra_axes="data",
+                ),
+                mesh=mesh,
+                in_specs=P(("pod", "data")),
+                out_specs=P(("pod", "data")),
+            )
+        )
+        got = np.asarray(fn(xs))  # compile + correctness
+        want = np.asarray(xs).sum(axis=0)
+        ok = np.allclose(got, np.tile(want, (8, 1)), rtol=1e-4, atol=1e-4)
+        failures += 0 if ok else 1
+        iters = 50
+        jax.block_until_ready(fn(xs))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(xs)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        print(
+            f"quick_{algo}_s{size * 4},{us:.3f},"
+            f"{'ok' if ok else 'MISMATCH'}"
+        )
+    return failures
 
 
 def main() -> None:
+    if "--quick" in sys.argv[1:]:
+        sys.exit(quick_smoke())
+
     print("name,us_per_call,derived")
     from benchmarks import paper_figures
 

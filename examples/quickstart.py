@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import collectives
 from repro.launch.mesh import make_mesh
 
@@ -29,7 +30,7 @@ def main():
 
     for algo in ["rd", "smp", "nap"]:
         fn = jax.jit(
-            jax.shard_map(
+            compat.shard_map(
                 partial(
                     collectives.ALGORITHMS[algo],
                     inter_axes="pod",

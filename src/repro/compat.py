@@ -1,0 +1,69 @@
+"""Version-compat shims for the installed jax.
+
+The repo targets the modern public API (``jax.shard_map``,
+``jax.sharding.AxisType``); older installs (0.4.x) expose the same
+functionality under experimental names and without explicit axis types.
+Everything that needs one of the moved symbols imports it from here so
+version probing lives in exactly one place.
+
+Exports:
+
+* :func:`shard_map` — keyword-compatible with ``jax.shard_map``; the
+  new-API-only ``check_vma`` argument is translated (or dropped) for the
+  experimental fallback.
+* :func:`mesh_axis_types_kwargs` — ``{"axis_types": (Auto,)*n}`` when the
+  install supports explicit axis types, else ``{}``.
+* :func:`normalize_cost_analysis` — ``Compiled.cost_analysis()`` returned
+  a one-element list of dicts on old jax; always returns the dict.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = [
+    "shard_map",
+    "axis_size",
+    "mesh_axis_types_kwargs",
+    "normalize_cost_analysis",
+]
+
+try:  # jax >= 0.6: public AxisType enum
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AxisType = None
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """Mesh(..., **mesh_axis_types_kwargs(len(axes))) on any jax."""
+    if _AxisType is None:
+        return {}
+    return {"axis_types": (_AxisType.Auto,) * n_axes}
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental module, check_rep instead of check_vma
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_exp(
+            f, mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:  # jax < 0.5: psum of a concrete 1 folds to the static axis size
+    def axis_size(name) -> int:
+        return jax.lax.psum(1, name)
+
+
+def normalize_cost_analysis(cost) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every jax version."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost

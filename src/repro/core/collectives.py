@@ -21,9 +21,17 @@ Algorithms:
 * :func:`ring_allreduce` — bandwidth-optimal ring reduce-scatter +
   allgather (Patarasuk & Yuan, cited as [25]).
 * :func:`rabenseifner_allreduce` — reduce-scatter + allgather via native
-  XLA collectives (§II, [5], [8]); the "large message" regime winner.
-* :func:`hierarchical_allreduce` — algorithm dispatcher with the paper's
-  size-based switch (NAP below ``small_threshold_bytes``, Figs 11/14/15).
+  XLA collectives (§II, [5], [8]); the "large message" baseline.
+* :func:`mla_allreduce` — multi-lane node-aware allreduce: the pod partial
+  is striped across local ranks (intra ``psum_scatter``), every lane runs
+  reduce-scatter + allgather over the slow domain concurrently with
+  ``s/ppn`` bytes, then an intra ``all_gather`` rebuilds the payload.  The
+  bandwidth-regime engine (§VI future work, executed).
+* :func:`hierarchical_allreduce` — three-regime dispatcher: NAP for small
+  payloads (latency regime), MLA for large ones (bandwidth regime), plain
+  psum when the mesh has no slow domain.  The NAP↔MLA switch point comes
+  from the §IV cost model (:func:`perf_model.crossover_bytes`) for the
+  actual grid shape, not a hardcoded constant.
 """
 
 from __future__ import annotations
@@ -37,6 +45,7 @@ import numpy as np
 from jax import lax
 
 from . import napalg
+from .. import compat
 
 __all__ = [
     "nap_allreduce",
@@ -44,7 +53,10 @@ __all__ = [
     "smp_allreduce",
     "ring_allreduce",
     "rabenseifner_allreduce",
+    "mla_allreduce",
     "hierarchical_allreduce",
+    "select_algorithm",
+    "auto_crossover_bytes",
     "ALGORITHMS",
 ]
 
@@ -67,11 +79,11 @@ def _chip_index(inter_axes: tuple[str, ...], intra_axes: tuple[str, ...]):
     """SMP-style flat chip id: node-major, local-rank-minor."""
     node = 0
     for ax in inter_axes:
-        node = node * lax.axis_size(ax) + lax.axis_index(ax)
+        node = node * compat.axis_size(ax) + lax.axis_index(ax)
     rank = 0
     for ax in intra_axes:
-        rank = rank * lax.axis_size(ax) + lax.axis_index(ax)
-    ppn = int(np.prod([lax.axis_size(ax) for ax in intra_axes]))
+        rank = rank * compat.axis_size(ax) + lax.axis_index(ax)
+    ppn = int(np.prod([compat.axis_size(ax) for ax in intra_axes]))
     return node * ppn + rank
 
 
@@ -110,8 +122,8 @@ def nap_allreduce(
     """
     inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
     fold, named_reduce, ident = _OPS[op]
-    n = int(np.prod([lax.axis_size(ax) for ax in inter]))
-    ppn = int(np.prod([lax.axis_size(ax) for ax in intra]))
+    n = int(np.prod([compat.axis_size(ax) for ax in inter]))
+    ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
     sched = napalg.build_nap_schedule(n, ppn)
     joint = inter + intra
 
@@ -119,24 +131,22 @@ def nap_allreduce(
     if not sched.steps:
         return v
     chip = _chip_index(inter, intra)
-    n_chips = n * ppn
-    for step in sched.steps:
-        contrib = jnp.full_like(v, ident)
-        for rnd in step.rounds:
+    if op == "sum":
+        # keep integer payloads integer (a weak-typed 0.0 would promote)
+        ident = jnp.zeros((), v.dtype)
+    # Host-constant mask tables (cached per (n, ppn)) + a single masked
+    # accumulation per round: the accumulator starts from the self
+    # contribution instead of an identity-filled temporary, so each
+    # inter-node step lowers to one select per round rather than the
+    # full_like + where + fold chain per mask.
+    for step, (rmasks, smask) in zip(
+        sched.steps, napalg.step_mask_tables(n, ppn)
+    ):
+        acc = jnp.where(_mask_lookup(smask, chip), v, ident)
+        for rnd, rmask in zip(step.rounds, rmasks):
             recv = lax.ppermute(v, joint, rnd)
-            rmask = np.zeros(n_chips, dtype=bool)
-            for _, dst in rnd:
-                rmask[dst] = True
-            contrib = fold(
-                contrib, jnp.where(_mask_lookup(rmask, chip), recv, ident)
-            )
-        smask = np.zeros(n_chips, dtype=bool)
-        for c in step.self_chips:
-            smask[c] = True
-        contrib = fold(
-            contrib, jnp.where(_mask_lookup(smask, chip), v, ident)
-        )
-        v = named_reduce(contrib, intra)
+            acc = jnp.where(_mask_lookup(rmask, chip), fold(acc, recv), acc)
+        v = named_reduce(acc, intra)
     return v
 
 
@@ -155,13 +165,9 @@ def _run_p2p_schedule(
 ) -> jax.Array:
     fold, _, _ = _OPS[op]
     chip = _chip_index(inter, intra)
-    n_chips = sched.n_chips
     v = x
-    for step in sched.steps:
+    for step, rmask in zip(sched.steps, napalg.p2p_recv_masks(sched)):
         recv = lax.ppermute(v, joint, step.pairs)
-        rmask = np.zeros(n_chips, dtype=bool)
-        for _, dst in step.pairs:
-            rmask[dst] = True
         flag = _mask_lookup(rmask, chip)
         if step.combine:
             v = jnp.where(flag, fold(v, recv), v)
@@ -186,8 +192,8 @@ def rd_allreduce(
     """
     inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
     joint = inter + intra
-    n = int(np.prod([lax.axis_size(ax) for ax in inter]))
-    ppn = int(np.prod([lax.axis_size(ax) for ax in intra])) if intra else 1
+    n = int(np.prod([compat.axis_size(ax) for ax in inter]))
+    ppn = int(np.prod([compat.axis_size(ax) for ax in intra])) if intra else 1
     sched = napalg.build_rd_schedule(n, ppn)
     return _run_p2p_schedule(x, sched, joint, inter, intra, op)
 
@@ -208,8 +214,8 @@ def smp_allreduce(
     """
     inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
     joint = inter + intra
-    n = int(np.prod([lax.axis_size(ax) for ax in inter]))
-    ppn = int(np.prod([lax.axis_size(ax) for ax in intra]))
+    n = int(np.prod([compat.axis_size(ax) for ax in inter]))
+    ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
     sched = napalg.build_smp_schedule(n, ppn)
     return _run_p2p_schedule(x, sched, joint, inter, intra, op)
 
@@ -230,7 +236,7 @@ def ring_allreduce(
     """
     fold, _, _ = _OPS[op]
     ax = _as_tuple(axes)
-    p = int(np.prod([lax.axis_size(a) for a in ax]))
+    p = int(np.prod([compat.axis_size(a) for a in ax]))
     if p == 1:
         return x
     orig_shape, orig_dtype = x.shape, x.dtype
@@ -241,7 +247,7 @@ def ring_allreduce(
     chunks = flat.reshape(p, -1)
     idx = 0
     for a in ax:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + lax.axis_index(a)
     fwd = [(i, (i + 1) % p) for i in range(p)]
 
     # reduce-scatter: after p-1 shifts, chip i owns the full sum of chunk
@@ -293,7 +299,7 @@ def rabenseifner_allreduce(
     if op != "sum":
         raise NotImplementedError("rabenseifner path supports sum only")
     ax = _as_tuple(axes)
-    p = int(np.prod([lax.axis_size(a) for a in ax]))
+    p = int(np.prod([compat.axis_size(a) for a in ax]))
     if p == 1:
         return x
     orig_shape, orig_dtype = x.shape, x.dtype
@@ -303,6 +309,62 @@ def rabenseifner_allreduce(
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     shard = lax.psum_scatter(flat.reshape(p, -1), ax, scatter_dimension=0, tiled=False)
     out = lax.all_gather(shard, ax, axis=0, tiled=False).reshape(-1)
+    if pad:
+        out = out[: out.size - pad]
+    return out.reshape(orig_shape).astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA allreduce — multi-lane node-aware bandwidth path
+# ---------------------------------------------------------------------------
+
+
+def mla_allreduce(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames,
+    op: str = "sum",
+) -> jax.Array:
+    """Multi-lane node-aware allreduce (the bandwidth-regime engine).
+
+    Three phases, mirroring :func:`napalg.build_mla_schedule`:
+
+      1. intra-pod ``psum_scatter`` stripes the pod-local partial across
+         the ``ppn`` local ranks — rank ``r`` owns stripe ``r`` of
+         ``s/ppn`` bytes;
+      2. every lane ``r`` runs an independent reduce-scatter + allgather
+         over ``inter_axes`` — all ``ppn`` lanes cross the slow domain
+         concurrently with ``s/ppn`` bytes each, instead of every chip
+         carrying the full ``s`` (the §II duplicate-traffic waste) or a
+         single master serialising the node's bandwidth (SMP);
+      3. intra-pod ``all_gather`` rebuilds the full reduced payload.
+
+    Per-chip inter-node traffic is ``~2*(s/ppn)*(n-1)/n`` — the data lower
+    bound divided across all local ranks — which is why this wins the
+    large-message regime the paper's §VI leaves as future work.
+    """
+    if op != "sum":
+        raise NotImplementedError("mla path supports sum only")
+    inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+    ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
+    n = int(np.prod([compat.axis_size(ax) for ax in inter]))
+    if ppn == 1:
+        return rabenseifner_allreduce(x, axes=inter, op=op)
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.size) % ppn
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    # phase 1: stripe the pod partial across local ranks
+    stripe = lax.psum_scatter(
+        flat.reshape(ppn, -1), intra, scatter_dimension=0, tiled=False
+    )
+    # phase 2: per-lane RS+AG across the slow domain (ppn parallel lanes)
+    if n > 1:
+        stripe = rabenseifner_allreduce(stripe, axes=inter, op=op)
+    # phase 3: rebuild the full payload inside the pod
+    out = lax.all_gather(stripe, intra, axis=0, tiled=False).reshape(-1)
     if pad:
         out = out[: out.size - pad]
     return out.reshape(orig_shape).astype(orig_dtype)
@@ -322,8 +384,47 @@ ALGORITHMS: dict[str, Callable] = {
     "nap": nap_allreduce,
     "rd": rd_allreduce,
     "smp": smp_allreduce,
+    "mla": mla_allreduce,
     "psum": _psum_allreduce,
 }
+
+
+@functools.lru_cache(maxsize=None)
+def auto_crossover_bytes(n: int, ppn: int, params=None) -> float:
+    """Model-driven NAP↔MLA crossover for an (n, ppn) grid (cached).
+
+    Replaces the old hardcoded 2048-byte switch: the crossover is solved
+    from the §IV max-rate cost model (``perf_model.crossover_bytes`` with
+    the MLA cost as the large-message contender) for the actual grid shape
+    and machine constants.
+    """
+    from . import perf_model as pm
+
+    if params is None:
+        params = pm.TPU_V5E_POD
+    if n <= 1:
+        return float("inf")  # no slow domain: NAP degenerates to psum
+    if ppn <= 1:
+        # NAP needs ppn >= 2 to trade steps for lanes; MLA degenerates to
+        # plain RS+AG over the slow domain, which is always valid here.
+        return 0.0
+    return pm.crossover_bytes(n, ppn, params, large="mla")
+
+
+def select_algorithm(
+    nbytes: int, n: int, ppn: int, params=None
+) -> str:
+    """The three-regime dispatch decision (host-side, trace-static).
+
+    * no slow domain (``n <= 1``) — "psum": single-level native reduce;
+    * ``nbytes`` at or below the modeled crossover — "nap": latency regime,
+      ``log_ppn(n)`` inter-node steps;
+    * above it — "mla": bandwidth regime, ``ppn`` striped lanes of
+      ``s/ppn`` bytes.
+    """
+    if n <= 1:
+        return "psum"
+    return "nap" if nbytes <= auto_crossover_bytes(n, ppn, params) else "mla"
 
 
 def hierarchical_allreduce(
@@ -333,25 +434,35 @@ def hierarchical_allreduce(
     intra_axes: AxisNames,
     algorithm: str = "auto",
     op: str = "sum",
-    small_threshold_bytes: int = 2048,
+    small_threshold_bytes: int | None = None,
 ) -> jax.Array:
-    """Allreduce over a two-level hierarchy with the paper's size switch.
+    """Allreduce over a two-level hierarchy with a model-driven switch.
 
-    ``algorithm="auto"`` picks NAP for payloads below
-    ``small_threshold_bytes`` (the paper's measured crossover, Figs 14/15)
-    and Rabenseifner reduce-scatter + allgather above it.
+    ``algorithm="auto"`` consults :func:`select_algorithm`: NAP below the
+    :func:`perf_model.crossover_bytes` NAP↔MLA crossover for this grid
+    (the paper measured ~2 KiB on Blue Waters at 32 768 processes), the
+    striped multi-lane MLA path above it, and plain psum when there is no
+    slow domain.  Pass ``small_threshold_bytes`` to override the modeled
+    crossover with a fixed byte threshold.
     """
     if algorithm == "auto":
         nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
-        algorithm = "nap" if nbytes <= small_threshold_bytes else "rabenseifner"
+        inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+        n = int(np.prod([compat.axis_size(ax) for ax in inter]))
+        ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
+        if small_threshold_bytes is not None:
+            algorithm = "nap" if nbytes <= small_threshold_bytes else "mla"
+        else:
+            algorithm = select_algorithm(nbytes, n, ppn)
     if algorithm == "ring":
         return ring_allreduce(
             x, axes=_as_tuple(inter_axes) + _as_tuple(intra_axes), op=op
         )
     if algorithm == "rabenseifner":
-        # node-aware large-message path: reduce inside the pod first so a
-        # single de-duplicated payload crosses the slow domain (SMP-style),
-        # then RS+AG over the inter axes, as §VI's future-work suggests.
+        # SMP-style large-message baseline: reduce inside the pod first so
+        # a single de-duplicated payload crosses the slow domain, then
+        # RS+AG over the inter axes.  Kept for comparison; the MLA path
+        # stripes the same traffic across all ppn lanes instead.
         _, named_reduce, _ = _OPS[op]
         local = named_reduce(x, _as_tuple(intra_axes))
         return rabenseifner_allreduce(local, axes=inter_axes, op=op)

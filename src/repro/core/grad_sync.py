@@ -10,22 +10,27 @@ Two call styles:
 
 Features, per the "distributed optimisation tricks" requirement:
 
-* paper-faithful *size switch*: buckets below the paper's ~2 KiB crossover
-  go through NAP (latency-bound regime, the contribution); large buckets
-  go through pod-local reduce + Rabenseifner RS/AG (bandwidth regime) —
-  exactly the hybrid the paper's §VI recommends.
+* model-driven *three-regime switch*: buckets below the modeled NAP↔MLA
+  crossover (``perf_model.crossover_bytes`` for the actual grid shape;
+  the paper measured ~2 KiB on Blue Waters) go through NAP (latency
+  regime, the contribution); large buckets go through the striped
+  multi-lane MLA path (bandwidth regime, ``s/ppn`` bytes per lane);
+  single-level meshes use plain psum — §VI's hybrid, with the switch
+  point solved from §IV instead of hardcoded.
 * *flat-bucket fusion*: small leaves are concatenated into one flat buffer
   so the whole latency-bound sync costs a single NAP schedule rather than
   one collective per tensor.
 * optional *int8 gradient compression* with a NAP-pmax shared scale (the
   scale reduction itself is a single-scalar allreduce — the paper's
   canonical small-message workload).
+* uniform dtype/op semantics: every leaf funnels through
+  :func:`_reduce_leaf`, so mean division and dtype round-trips behave the
+  same for float, bf16 and integer gradients on every code path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -35,6 +40,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from . import collectives
+from .. import compat
 
 __all__ = ["GradSyncConfig", "sync_grads_local", "make_grad_sync"]
 
@@ -43,21 +49,45 @@ __all__ = ["GradSyncConfig", "sync_grads_local", "make_grad_sync"]
 class GradSyncConfig:
     """Configuration of the gradient allreduce.
 
-    algorithm: "nap" | "rd" | "smp" | "psum" | "ring" | "rabenseifner" |
-      "auto" (paper size switch).
-    mean: divide by the DP group size (data-parallel averaging).
+    algorithm: "nap" | "rd" | "smp" | "mla" | "psum" | "ring" |
+      "rabenseifner" | "auto" (model-driven three-regime switch).
+    mean: divide by the DP group size (data-parallel averaging).  Applies
+      to *every* leaf: integer gradients are averaged in float32 and
+      rounded back to their dtype rather than silently left as sums.
     compress_bits: None (off) or 8 — int8 quantised transport with a
-      shared max-abs scale.
-    small_threshold_bytes: the NAP/RS+AG crossover for "auto" (paper's
-      measured ~2048 bytes, Figs 14/15).
+      shared max-abs scale (float leaves only).
+    small_threshold_bytes: NAP↔MLA crossover for "auto" and the fusion
+      bucket bound.  ``None`` (default) derives it from the §IV cost model
+      (:func:`collectives.auto_crossover_bytes`) for the actual grid.
     fuse_small_buckets: concatenate small leaves into one flat payload.
     """
 
     algorithm: str = "auto"
     mean: bool = True
     compress_bits: int | None = None
-    small_threshold_bytes: int = 2048
+    small_threshold_bytes: int | None = None
     fuse_small_buckets: bool = True
+
+
+# fallback fusion bound when no slow domain exists (nothing to switch;
+# the threshold only decides which leaves share the fused flat bucket)
+_DEFAULT_FUSE_BYTES = 2048
+
+
+def _resolved_threshold(
+    cfg: GradSyncConfig, inter_axes, intra_axes
+) -> float:
+    """The byte threshold actually in force (fixed or model-driven)."""
+    if cfg.small_threshold_bytes is not None:
+        return float(cfg.small_threshold_bytes)
+    if not inter_axes:
+        return float(_DEFAULT_FUSE_BYTES)
+    import math
+
+    n = int(np.prod([compat.axis_size(a) for a in inter_axes]))
+    ppn = int(np.prod([compat.axis_size(a) for a in intra_axes]))
+    xo = collectives.auto_crossover_bytes(n, ppn)
+    return xo if math.isfinite(xo) else float(_DEFAULT_FUSE_BYTES)
 
 
 def _one_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
@@ -74,7 +104,10 @@ def _one_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
 
 
 def _compressed_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
-    """int8-quantised allreduce with a globally agreed max-abs scale."""
+    """int8-quantised allreduce with a globally agreed max-abs scale.
+
+    Returns float32; :func:`_reduce_leaf` restores the caller's dtype.
+    """
     bits = cfg.compress_bits
     qmax = float(2 ** (bits - 1) - 1)
     absmax = jnp.max(jnp.abs(x)).astype(jnp.float32)
@@ -90,6 +123,29 @@ def _compressed_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
     return summed.astype(jnp.float32) * scale
 
 
+def _reduce_leaf(g, cfg: GradSyncConfig, inter_axes, intra_axes, group):
+    """Allreduce one leaf with op/mean/dtype semantics in one place.
+
+    Every leaf — float, bf16, integer, fused flat bucket — funnels through
+    here so the transport dtype, the mean division and the round-trip back
+    to the original dtype cannot diverge between code paths (they used to:
+    integer leaves skipped ``mean`` silently and the compressed path
+    returned hardcoded float32).
+    """
+    dtype = g.dtype
+    is_float = jnp.issubdtype(dtype, jnp.floating)
+    if cfg.compress_bits and is_float:
+        red = _compressed_allreduce(g, cfg, inter_axes, intra_axes)
+    else:
+        red = _one_allreduce(g, cfg, inter_axes, intra_axes)
+    if cfg.mean and group > 1:
+        if is_float:
+            red = red / group
+        else:
+            red = jnp.round(red.astype(jnp.float32) / group)
+    return red.astype(dtype)
+
+
 def sync_grads_local(
     grads: Any,
     *,
@@ -100,23 +156,18 @@ def sync_grads_local(
     """Synchronise a pytree of per-chip local gradients (inside shard_map)."""
     axes = tuple(inter_axes) + tuple(intra_axes)
     group = int(
-        np.prod([lax.axis_size(a) for a in axes]) if axes else 1
+        np.prod([compat.axis_size(a) for a in axes]) if axes else 1
     )
     leaves, treedef = jax.tree.flatten(grads)
     if not leaves:
         return grads
 
-    reduce_fn = (
-        functools.partial(_compressed_allreduce, cfg=cfg)
-        if cfg.compress_bits
-        else functools.partial(_one_allreduce, cfg=cfg)
-    )
-
+    threshold = _resolved_threshold(cfg, inter_axes, intra_axes)
     small_idx = [
         i
         for i, g in enumerate(leaves)
         if cfg.fuse_small_buckets
-        and g.size * g.dtype.itemsize <= cfg.small_threshold_bytes
+        and g.size * g.dtype.itemsize <= threshold
         and jnp.issubdtype(g.dtype, jnp.floating)
     ]
     out = list(leaves)
@@ -124,7 +175,7 @@ def sync_grads_local(
         flat = jnp.concatenate(
             [leaves[i].astype(jnp.float32).reshape(-1) for i in small_idx]
         )
-        flat = reduce_fn(flat, inter_axes=inter_axes, intra_axes=intra_axes)
+        flat = _reduce_leaf(flat, cfg, inter_axes, intra_axes, group)
         off = 0
         for i in small_idx:
             g = leaves[i]
@@ -134,16 +185,7 @@ def sync_grads_local(
     else:
         rest = list(range(len(leaves)))
     for i in rest:
-        out[i] = reduce_fn(
-            leaves[i], inter_axes=inter_axes, intra_axes=intra_axes
-        )
-    if cfg.mean and group > 1:
-        out = [
-            (g / group).astype(g.dtype)
-            if jnp.issubdtype(g.dtype, jnp.floating)
-            else g
-            for g in out
-        ]
+        out[i] = _reduce_leaf(leaves[i], cfg, inter_axes, intra_axes, group)
     return jax.tree.unflatten(treedef, out)
 
 
@@ -170,6 +212,6 @@ def make_grad_sync(
             grads, cfg=cfg, inter_axes=inter, intra_axes=intra
         )
 
-    return jax.shard_map(
+    return compat.shard_map(
         _local, mesh=mesh, in_specs=(grad_specs,), out_specs=grad_specs
     )

@@ -42,6 +42,7 @@ Chip numbering is SMP-style (paper §III): ``chip = node * ppn + rank``.
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
@@ -54,6 +55,9 @@ __all__ = [
     "build_nap_schedule",
     "build_rd_schedule",
     "build_smp_schedule",
+    "build_mla_schedule",
+    "step_mask_tables",
+    "p2p_recv_masks",
     "simulate_allreduce",
     "nap_num_steps",
     "message_counts",
@@ -125,6 +129,10 @@ class NapSchedule:
             sum(1 for s, d in step.messages if s != d) for step in self.steps
         )
 
+    def max_internode_bytes_per_chip(self, s: float) -> float:
+        """Every NAP message carries the full payload."""
+        return float(self.max_messages_per_chip() * s)
+
 
 # ---------------------------------------------------------------------------
 # grouping: balanced, top-down
@@ -191,8 +199,15 @@ def _build_levels(
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
 def build_nap_schedule(n_nodes: int, ppn: int) -> NapSchedule:
-    """Build the full NAP schedule (paper Algorithm 1 + §III.A extension)."""
+    """Build the full NAP schedule (paper Algorithm 1 + §III.A extension).
+
+    Cached: schedule construction is pure in ``(n_nodes, ppn)`` and sits on
+    the trace-time hot path of every ``nap_allreduce`` call, so repeated
+    traces at the same grid shape hit ``lru_cache`` instead of re-running
+    the recursive grouping.
+    """
     if n_nodes < 1 or ppn < 1:
         raise ValueError("n_nodes and ppn must be positive")
     n_steps = nap_num_steps(n_nodes, ppn) if n_nodes > 1 else 0
@@ -300,11 +315,15 @@ class P2PStep:
     """One step of a point-to-point baseline schedule.
 
     ``pairs`` is a list of (src, dst) messages issued concurrently;
-    ``combine`` marks whether receivers fold the payload into their value.
+    ``combine`` marks whether receivers fold the payload into their value;
+    ``frac`` is the fraction of the full reduction payload each message of
+    this step carries (1.0 for whole-payload exchanges; striped schedules
+    like MLA move ``1/ppn`` or ``1/(n*ppn)`` of the bytes per message).
     """
 
     pairs: tuple[tuple[int, int], ...]
     combine: bool = True
+    frac: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -328,7 +347,18 @@ class P2PSchedule:
                     sends[src] += 1
         return int(sends.max(initial=0))
 
+    def max_internode_bytes_per_chip(self, s: float) -> float:
+        """Max over chips of inter-node bytes *sent* for an ``s``-byte
+        reduction — the quantity the striped MLA path divides by ppn."""
+        sends = np.zeros(self.n_chips, dtype=np.float64)
+        for step in self.steps:
+            for src, dst in step.pairs:
+                if src // self.ppn != dst // self.ppn:
+                    sends[src] += step.frac * s
+        return float(sends.max(initial=0.0))
 
+
+@functools.lru_cache(maxsize=None)
 def build_rd_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
     """Node-agnostic recursive doubling over all p = n*ppn chips.
 
@@ -361,6 +391,7 @@ def build_rd_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
     return P2PSchedule(n_nodes, ppn, tuple(steps), kind="rd")
 
 
+@functools.lru_cache(maxsize=None)
 def build_smp_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
     """MPICH SMP allreduce: local tree reduce -> RD among masters -> bcast."""
     steps: list[P2PStep] = []
@@ -414,6 +445,133 @@ def build_smp_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
         span //= 2
     steps.extend(bcast_steps)
     return P2PSchedule(n_nodes, ppn, tuple(steps), kind="smp")
+
+
+@functools.lru_cache(maxsize=None)
+def build_mla_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
+    """Multi-lane node-aware (MLA) allreduce message schedule.
+
+    The bandwidth-regime mirror of NAP: instead of each chip carrying the
+    *full* payload across the slow domain, the pod-local partial is striped
+    across the ``ppn`` local ranks (intra reduce-scatter), every lane ``r``
+    then runs an independent reduce-scatter + allgather over the
+    ``n_nodes`` nodes with its ``s/ppn``-byte stripe, and an intra
+    allgather rebuilds the full payload.  Per-chip inter-node traffic
+    drops from ``~2s`` (node-agnostic RS+AG) to ``~2*(s/ppn)*(n-1)/n`` —
+    the paper's §VI "future work" regime, executed as ppn concurrent
+    lanes.
+
+    Both RS/AG phases are realized as recursive halving/doubling
+    butterflies — ``ceil(log2(k))`` latency steps with message sizes
+    halving per step — matching what ``cost_mla`` models and what the
+    executed ``mla_allreduce`` lowers to, so the simulator's replay, the
+    closed-form model and the real path agree on both the latency-step
+    count and the byte totals.  (A ring realization would charge ``k-1``
+    alpha-steps and materialize O(k^2) pairs, which is neither.)  For
+    non-power counts the step fractions are rescaled so per-chip bytes
+    stay exactly ``(k-1)/k`` of the phase payload.
+
+    Message sizes are carried as payload *fractions* (of the full ``s``)
+    in ``P2PStep.frac`` so the event-driven simulator can replay the
+    striped schedule exactly.
+    """
+    if n_nodes < 1 or ppn < 1:
+        raise ValueError("n_nodes and ppn must be positive")
+
+    def halving_fracs(k: int, scale: float) -> list[float]:
+        """Per-step payload fractions of a k-way recursive-halving RS."""
+        if k <= 1:
+            return []
+        n_steps = math.ceil(math.log2(k))
+        raw = [2.0 ** -(i + 1) for i in range(n_steps)]
+        return [f * ((k - 1) / k) / sum(raw) * scale for f in raw]
+
+    def intra_pairs(bit: int) -> tuple[tuple[int, int], ...]:
+        return tuple(
+            (node * ppn + r, node * ppn + (r ^ bit))
+            for node in range(n_nodes)
+            for r in range(ppn)
+            if (r ^ bit) < ppn
+        )
+
+    def inter_pairs(bit: int) -> tuple[tuple[int, int], ...]:
+        return tuple(
+            (node * ppn + r, (node ^ bit) * ppn + r)
+            for node in range(n_nodes)
+            for r in range(ppn)
+            if (node ^ bit) < n_nodes
+        )
+
+    intra_fracs = halving_fracs(ppn, 1.0)
+    inter_fracs = halving_fracs(n_nodes, 1.0 / ppn)  # per-lane stripes
+    li, lo = len(intra_fracs), len(inter_fracs)
+
+    steps: list[P2PStep] = []
+    # stripe the pod partial: halving RS, farthest partner first
+    for i, f in enumerate(intra_fracs):
+        steps.append(
+            P2PStep(intra_pairs(1 << (li - 1 - i)), combine=True, frac=f)
+        )
+    # per-lane RS across the slow domain
+    for i, f in enumerate(inter_fracs):
+        steps.append(
+            P2PStep(inter_pairs(1 << (lo - 1 - i)), combine=True, frac=f)
+        )
+    # per-lane AG: doubling, smallest chunk first
+    for i, f in enumerate(reversed(inter_fracs)):
+        steps.append(P2PStep(inter_pairs(1 << i), combine=False, frac=f))
+    # rebuild the full payload inside the pod
+    for i, f in enumerate(reversed(intra_fracs)):
+        steps.append(P2PStep(intra_pairs(1 << i), combine=False, frac=f))
+    return P2PSchedule(n_nodes, ppn, tuple(steps), kind="mla")
+
+
+# ---------------------------------------------------------------------------
+# host-constant mask tables (trace-time hot path)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def step_mask_tables(
+    n_nodes: int, ppn: int
+) -> tuple[tuple[tuple[np.ndarray, ...], np.ndarray], ...]:
+    """Per-step (receive-mask-per-round, self-mask) boolean tables.
+
+    Computed once per (n_nodes, ppn) on the host and embedded as tiny
+    constants by the collective lowering, replacing the per-trace Python
+    loops that previously rebuilt each mask on every ``nap_allreduce``
+    trace.  Entry ``i`` pairs with ``build_nap_schedule(...).steps[i]``.
+    """
+    sched = build_nap_schedule(n_nodes, ppn)
+    n_chips = sched.n_chips
+    tables = []
+    for step in sched.steps:
+        rmasks = []
+        for rnd in step.rounds:
+            m = np.zeros(n_chips, dtype=bool)
+            for _, dst in rnd:
+                m[dst] = True
+            m.setflags(write=False)
+            rmasks.append(m)
+        smask = np.zeros(n_chips, dtype=bool)
+        for c in step.self_chips:
+            smask[c] = True
+        smask.setflags(write=False)
+        tables.append((tuple(rmasks), smask))
+    return tuple(tables)
+
+
+@functools.lru_cache(maxsize=None)
+def p2p_recv_masks(sched: P2PSchedule) -> tuple[np.ndarray, ...]:
+    """Per-step receive masks for a P2P schedule (host constants)."""
+    out = []
+    for step in sched.steps:
+        m = np.zeros(sched.n_chips, dtype=bool)
+        for _, dst in step.pairs:
+            m[dst] = True
+        m.setflags(write=False)
+        out.append(m)
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------

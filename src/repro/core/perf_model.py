@@ -35,6 +35,7 @@ __all__ = [
     "cost_rd",
     "cost_smp",
     "cost_nap",
+    "cost_mla",
     "crossover_bytes",
 ]
 
@@ -133,20 +134,53 @@ def cost_nap(s: float, n: int, ppn: int, p: MachineParams) -> float:
     return intra + inter + comp
 
 
+def cost_mla(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Multi-lane node-aware (MLA) allreduce under the max-rate model.
+
+    Intra: psum_scatter + allgather each move ``s*(ppn-1)/ppn`` bytes over
+    the fast domain in ``log2(ppn)`` message rounds.  Inter: all ``ppn``
+    lanes run reduce-scatter + allgather concurrently, so each chip crosses
+    the slow domain with ``2*(s/ppn)*(n-1)/n`` bytes at the per-chip rate
+    ``min(R_b, R_N/ppn)`` (all lanes inject at once) over ``2*log2(n)``
+    latency steps.
+    """
+    lanes = max(1, ppn)
+    intra_steps = 2 * math.ceil(_log2(ppn)) if ppn > 1 else 0
+    intra = intra_steps * p.alpha_l + 2.0 * p.beta_l * s * (lanes - 1) / lanes
+    if n > 1:
+        inter_steps = 2 * math.ceil(_log2(n))
+        lane_bytes = 2.0 * (s / lanes) * (n - 1) / n
+        rate = min(p.R_b, p.R_N / lanes)
+        inter = inter_steps * p.alpha + lane_bytes / rate
+    else:
+        inter = 0.0
+    comp = p.gamma * s * 2.0  # local stripe reduce + per-lane RS folds
+    return intra + inter + comp
+
+
+_LARGE_COSTS = {"smp": cost_smp, "rd": cost_rd, "mla": cost_mla}
+
+
 def crossover_bytes(
     n: int,
     ppn: int,
     p: MachineParams,
     lo: float = 8.0,
     hi: float = 1 << 22,
+    large: str = "smp",
 ) -> float:
-    """Smallest message size where SMP becomes cheaper than NAP (the
-    paper's measured ~2048 B at 32 768 processes)."""
-    if cost_nap(lo, n, ppn, p) > cost_smp(lo, n, ppn, p):
+    """Smallest message size where the ``large``-regime algorithm becomes
+    cheaper than NAP (the paper measured ~2048 B vs SMP at 32 768
+    processes).  ``large="mla"`` yields the dispatcher's NAP↔MLA switch
+    point."""
+    cost_large = _LARGE_COSTS[large]
+    if cost_nap(lo, n, ppn, p) > cost_large(lo, n, ppn, p):
         return lo
+    if cost_nap(hi, n, ppn, p) <= cost_large(hi, n, ppn, p):
+        return hi
     while hi / lo > 1.01:
         mid = math.sqrt(lo * hi)
-        if cost_nap(mid, n, ppn, p) <= cost_smp(mid, n, ppn, p):
+        if cost_nap(mid, n, ppn, p) <= cost_large(mid, n, ppn, p):
             lo = mid
         else:
             hi = mid

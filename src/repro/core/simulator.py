@@ -26,7 +26,7 @@ import numpy as np
 from . import napalg
 from .perf_model import MachineParams
 
-__all__ = ["simulate_time", "simulate_algorithm"]
+__all__ = ["simulate_time", "simulate_algorithm", "internode_bytes_per_chip"]
 
 
 def _local_allreduce_time(
@@ -105,13 +105,15 @@ def simulate_time(
                 )
             t = _local_allreduce_time(t, n, ppn, s, p)
         return float(t.max())
-    # P2P schedules (RD / SMP)
+    # P2P schedules (RD / SMP / MLA).  Striped schedules carry a payload
+    # fraction per step, so the striped MLA path is replayed with the real
+    # s/ppn (intra) and s/(n*ppn) (inter-lane) message sizes.
     for step in schedule.steps:
         t = _message_step_time(
             t,
             np.asarray(step.pairs, dtype=np.int64).reshape(-1, 2),
             ppn,
-            s,
+            s * getattr(step, "frac", 1.0),
             p,
             combine=step.combine,
         )
@@ -122,17 +124,22 @@ _BUILDERS = {
     "nap": napalg.build_nap_schedule,
     "rd": napalg.build_rd_schedule,
     "smp": napalg.build_smp_schedule,
+    "mla": napalg.build_mla_schedule,
 }
-
-_SCHED_CACHE: dict[tuple[str, int, int], object] = {}
 
 
 def simulate_algorithm(
     algo: str, n_nodes: int, ppn: int, s: float, p: MachineParams
 ) -> float:
-    key = (algo, n_nodes, ppn)
-    sched = _SCHED_CACHE.get(key)
-    if sched is None:
-        sched = _BUILDERS[algo](n_nodes, ppn)
-        _SCHED_CACHE[key] = sched
-    return simulate_time(sched, s, p)
+    # the schedule builders are lru_cached, so no cache layer needed here
+    return simulate_time(_BUILDERS[algo](n_nodes, ppn), s, p)
+
+
+def internode_bytes_per_chip(algo: str, n_nodes: int, ppn: int, s: float) -> float:
+    """Max inter-node bytes any chip sends for an ``s``-byte reduction.
+
+    The quantity the MLA stripe divides by ppn: replaying the schedules
+    shows ``~2s`` for node-agnostic RS+AG lowerings, ``steps*s`` for NAP,
+    and ``~2*(s/ppn)*(n-1)/n`` for MLA.
+    """
+    return _BUILDERS[algo](n_nodes, ppn).max_internode_bytes_per_chip(s)

@@ -29,6 +29,7 @@ from pathlib import Path  # noqa: E402
 
 import jax  # noqa: E402
 
+from .. import compat  # noqa: E402
 from ..configs import ARCHS, SHAPES, get_config  # noqa: E402
 from . import roofline as rl  # noqa: E402
 from .mesh import make_production_mesh  # noqa: E402
@@ -166,7 +167,7 @@ def run_cell(
             ),
             "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
         }
-        cost = dict(cost) if cost else {}
+        cost = dict(compat.normalize_cost_analysis(cost)) if cost else {}
         record["cost"] = {
             k: float(v)
             for k, v in cost.items()

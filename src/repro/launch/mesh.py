@@ -9,7 +9,9 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..compat import mesh_axis_types_kwargs
 
 __all__ = [
     "make_mesh",
@@ -43,7 +45,7 @@ def make_mesh(shape, axes):
     return Mesh(
         np.asarray(devs[:n]).reshape(shape),
         tuple(axes),
-        axis_types=(AxisType.Auto,) * len(axes),
+        **mesh_axis_types_kwargs(len(axes)),
     )
 
 

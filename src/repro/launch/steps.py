@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import compat
 from ..configs import SHAPES, get_config
 from ..models import ShardingPolicy, build_model
 from ..optim import adamw_init, adamw_update, make_schedule
@@ -224,7 +225,7 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
 
     state_spec = {"params": P(), "opt": P()}
     batch_spec = P(dp, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local_step,
         mesh=mesh,
         in_specs=(state_spec, batch_spec),

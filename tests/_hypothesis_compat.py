@@ -1,0 +1,70 @@
+"""hypothesis if installed, else a tiny deterministic fallback.
+
+The seed environment does not ship ``hypothesis``; rather than losing the
+property tests entirely, this shim implements exactly the strategy
+surface the suite uses (``integers``, ``sampled_from``, ``none``,
+``one_of``) and runs each ``@given`` test as a deterministic sweep of
+pseudo-random draws (seeded, capped at 25 examples).  With hypothesis
+installed the real library is re-exported unchanged.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import random as _random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_CAP = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def one_of(*strats):
+            return _Strategy(lambda rng: rng.choice(strats).draw(rng))
+
+    st = _Strategies()
+
+    def settings(max_examples=_FALLBACK_CAP, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(
+                    getattr(wrapper, "_max_examples", _FALLBACK_CAP),
+                    _FALLBACK_CAP,
+                )
+                rng = _random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must not see the original parameters as fixtures
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -21,6 +21,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import collectives  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 
@@ -43,7 +44,7 @@ def check_allreduce_correctness():
 
     for algo in ["nap", "rd", "smp", "psum"]:
         fn = jax.jit(
-            jax.shard_map(
+            compat.shard_map(
                 partial(
                     collectives.ALGORITHMS[algo],
                     inter_axes="pod",
@@ -60,7 +61,7 @@ def check_allreduce_correctness():
 
     for algo in ["ring", "rabenseifner"]:
         fn = jax.jit(
-            jax.shard_map(
+            compat.shard_map(
                 partial(
                     collectives.hierarchical_allreduce,
                     inter_axes="pod",
@@ -79,7 +80,7 @@ def check_allreduce_correctness():
     # max / min ops through the NAP path
     for op in ["max", "min"]:
         fn = jax.jit(
-            jax.shard_map(
+            compat.shard_map(
                 partial(
                     collectives.nap_allreduce,
                     inter_axes="pod",
@@ -96,6 +97,154 @@ def check_allreduce_correctness():
         record(f"correct_nap_{op}", np.allclose(got, np.tile(ref, (16, 1))))
 
 
+def check_mla_allreduce():
+    """MLA striped bandwidth path: exact vs np.sum oracle, power-of-two
+    and ragged payload sizes, plus a multi-axis intra hierarchy."""
+    rng = np.random.default_rng(11)
+
+    def run(mesh, spec, size, algo="mla"):
+        xs = jnp.asarray(
+            rng.normal(size=(16, size)).astype(np.float32)
+        )
+        fn = jax.jit(
+            compat.shard_map(
+                partial(
+                    collectives.ALGORITHMS[algo]
+                    if algo in collectives.ALGORITHMS
+                    else collectives.hierarchical_allreduce,
+                    inter_axes=spec[0],
+                    intra_axes=spec[1],
+                ),
+                mesh=mesh,
+                in_specs=P(tuple(mesh.axis_names)),
+                out_specs=P(tuple(mesh.axis_names)),
+            )
+        )
+        got = np.asarray(fn(xs))
+        want = np.asarray(xs).sum(axis=0)
+        return np.allclose(got, np.tile(want, (16, 1)), rtol=1e-5, atol=1e-5)
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    record("correct_mla_pow2", run(mesh, ("pod", "data"), 64))
+    # ragged payload: 37 % ppn != 0 and the stripe 10 % n != 0 (padding)
+    record("correct_mla_ragged", run(mesh, ("pod", "data"), 37))
+    # ragged payload smaller than the chip count
+    record("correct_mla_tiny", run(mesh, ("pod", "data"), 3))
+    mesh3 = make_mesh((2, 2, 4), ("pod", "data", "model"))
+    record(
+        "correct_mla_multiaxis",
+        run(mesh3, ("pod", ("data", "model")), 21),
+    )
+
+
+def check_ragged_roundtrips():
+    """ring / rabenseifner / mla round-trip non-divisible payloads."""
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(13)
+    for algo in ["ring", "rabenseifner", "mla"]:
+        ok = True
+        for size in [1, 5, 13, 47]:  # all ragged vs p=16 / ppn=4
+            xs = jnp.asarray(
+                rng.normal(size=(16, size)).astype(np.float32)
+            )
+            fn = jax.jit(
+                compat.shard_map(
+                    partial(
+                        collectives.hierarchical_allreduce,
+                        inter_axes="pod",
+                        intra_axes="data",
+                        algorithm=algo,
+                    ),
+                    mesh=mesh,
+                    in_specs=P(("pod", "data")),
+                    out_specs=P(("pod", "data")),
+                )
+            )
+            got = np.asarray(fn(xs))
+            want = np.asarray(xs).sum(axis=0)
+            ok &= np.allclose(
+                got, np.tile(want, (16, 1)), rtol=1e-5, atol=1e-5
+            )
+        record(f"ragged_roundtrip_{algo}", ok)
+
+
+def check_auto_dispatch():
+    """'auto' must pick NAP vs MLA from the modeled crossover, visible in
+    the lowered HLO (permutes for NAP; no permutes, RS/AG for MLA)."""
+    from repro.core import perf_model as pm
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    xo = collectives.auto_crossover_bytes(4, 4)
+    # decision agrees with perf_model, not a hardcoded constant
+    ok_sel = (
+        collectives.select_algorithm(int(xo) - 8, 4, 4) == "nap"
+        and collectives.select_algorithm(int(xo) + 8, 4, 4) == "mla"
+        and xo == pm.crossover_bytes(4, 4, pm.TPU_V5E_POD, large="mla")
+        and collectives.select_algorithm(1 << 30, 1, 16) == "psum"
+    )
+
+    def lower_auto(n_elems):
+        fn = jax.jit(
+            compat.shard_map(
+                partial(
+                    collectives.hierarchical_allreduce,
+                    inter_axes="pod",
+                    intra_axes="data",
+                ),
+                mesh=mesh,
+                in_specs=P(("pod", "data")),
+                out_specs=P(("pod", "data")),
+            )
+        )
+        return fn.lower(
+            jnp.zeros((16, n_elems), jnp.float32)
+        ).compile().as_text()
+
+    small_hlo = lower_auto(2)  # 8 B/chip << crossover -> NAP
+    large_elems = int(xo) // 4 * 2  # ~2x crossover in f32 -> MLA
+    large_hlo = lower_auto(large_elems)
+    ok_hlo = (
+        small_hlo.count("collective-permute(") >= 1
+        and large_hlo.count("collective-permute(") == 0
+    )
+    record(
+        "auto_dispatch_model_driven",
+        ok_sel and ok_hlo,
+        crossover_bytes=xo,
+        small_cp=small_hlo.count("collective-permute("),
+        large_cp=large_hlo.count("collective-permute("),
+    )
+
+
+def check_schedule_cache():
+    """Repeated traces at the same (n, ppn) must hit the lru_cache."""
+    from repro.core import napalg
+
+    napalg.build_nap_schedule.cache_clear()
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    for size in [4, 8]:  # two traces, same grid
+        fn = jax.jit(
+            compat.shard_map(
+                partial(
+                    collectives.nap_allreduce,
+                    inter_axes="pod",
+                    intra_axes="data",
+                ),
+                mesh=mesh,
+                in_specs=P(("pod", "data")),
+                out_specs=P(("pod", "data")),
+            )
+        )
+        fn(jnp.zeros((16, size), jnp.float32))
+    info = napalg.build_nap_schedule.cache_info()
+    record(
+        "schedule_cache_hits",
+        info.hits > 0,
+        hits=info.hits,
+        misses=info.misses,
+    )
+
+
 def check_internode_message_reduction():
     """The paper's headline, at the HLO level: NAP lowers to log_ppn(n)
     collective-permutes vs log2(p) for recursive doubling."""
@@ -104,7 +253,7 @@ def check_internode_message_reduction():
 
     def lower(algo):
         fn = jax.jit(
-            jax.shard_map(
+            compat.shard_map(
                 partial(
                     collectives.ALGORITHMS[algo],
                     inter_axes="pod",
@@ -140,7 +289,7 @@ def check_nonpower_mesh():
     rng = np.random.default_rng(1)
     xs = jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))
     fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             partial(
                 collectives.nap_allreduce, inter_axes="pod", intra_axes="data"
             ),
@@ -163,7 +312,7 @@ def check_multiaxis_hierarchy():
     rng = np.random.default_rng(2)
     xs = jnp.asarray(rng.normal(size=(16, 5)).astype(np.float32))
     fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             partial(
                 collectives.nap_allreduce,
                 inter_axes="pod",
@@ -217,6 +366,97 @@ def check_grad_sync():
         scale = np.abs(np.asarray(grads[k])).max() * 16
         ok &= np.abs(got - want).max() < scale * (2.0 / 127)
     record("grad_sync_compressed", ok)
+
+
+def check_grad_sync_dtypes():
+    """Regression: op/mean/dtype semantics must be uniform across leaves.
+
+    Integer leaves get the rounded mean (not a silent sum), bf16 leaves
+    keep bf16, and the compressed path returns the original dtype instead
+    of hardcoded float32.
+    """
+    from repro.core import grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(17)
+    grads = {
+        "f32": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32)),
+        "bf16": jnp.asarray(
+            rng.normal(size=(16, 4)).astype(np.float32)
+        ).astype(jnp.bfloat16),
+        "i32": jnp.asarray(
+            rng.integers(-40, 40, size=(16, 2)).astype(np.int32)
+        ),
+    }
+    specs = {k: P(("pod", "data")) for k in grads}
+    cfg = grad_sync.GradSyncConfig(algorithm="auto", mean=True)
+    sync = grad_sync.make_grad_sync(
+        cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+    )
+    out = jax.jit(sync)(grads)
+    ok = all(out[k].dtype == grads[k].dtype for k in grads)
+    want_f32 = np.asarray(grads["f32"]).mean(axis=0)
+    ok &= np.allclose(
+        np.asarray(out["f32"]), np.tile(want_f32, (16, 1)), rtol=1e-5
+    )
+    want_bf16 = np.asarray(
+        grads["bf16"].astype(jnp.float32)
+    ).mean(axis=0)
+    ok &= np.allclose(
+        np.asarray(out["bf16"].astype(jnp.float32)),
+        np.tile(want_bf16, (16, 1)),
+        rtol=2e-2, atol=2e-2,
+    )
+    want_i32 = np.round(
+        np.asarray(grads["i32"], dtype=np.float64).mean(axis=0)
+    ).astype(np.int32)
+    ok &= np.array_equal(np.asarray(out["i32"]), np.tile(want_i32, (16, 1)))
+    record("grad_sync_dtype_semantics", ok)
+
+    # compressed path keeps the original dtype too
+    cfg = grad_sync.GradSyncConfig(
+        algorithm="auto", mean=False, compress_bits=8,
+        fuse_small_buckets=False,
+    )
+    sync = grad_sync.make_grad_sync(
+        cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+    )
+    out = jax.jit(sync)(grads)
+    ok = all(out[k].dtype == grads[k].dtype for k in grads)
+    # integer leaves bypass quantisation: exact sum
+    want_i32 = np.asarray(grads["i32"], dtype=np.int64).sum(axis=0)
+    ok &= np.array_equal(
+        np.asarray(out["i32"], dtype=np.int64), np.tile(want_i32, (16, 1))
+    )
+    record("grad_sync_compressed_dtypes", ok)
+
+
+def check_grad_sync_mla():
+    """Large buckets route through MLA and still produce the exact mean."""
+    from repro.core import grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(19)
+    grads = {
+        "big": jnp.asarray(
+            rng.normal(size=(16, 3000)).astype(np.float32)
+        ),
+        "tiny": jnp.asarray(rng.normal(size=(16, 2)).astype(np.float32)),
+    }
+    specs = {k: P(("pod", "data")) for k in grads}
+    cfg = grad_sync.GradSyncConfig(algorithm="mla", mean=True)
+    sync = grad_sync.make_grad_sync(
+        cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+    )
+    out = jax.jit(sync)(grads)
+    ok = True
+    for k in grads:
+        want = np.asarray(grads[k]).mean(axis=0)
+        ok &= np.allclose(
+            np.asarray(out[k]), np.tile(want, (16, 1)),
+            rtol=1e-5, atol=1e-5,
+        )
+    record("grad_sync_mla_mean", ok)
 
 
 def check_dp_training_nap_equals_psum():
@@ -273,7 +513,7 @@ def check_nap_extensions():
     xs = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
 
     fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             partial(
                 extensions.nap_allgather, inter_axes="pod", intra_axes="data"
             ),
@@ -293,7 +533,7 @@ def check_nap_extensions():
         )
 
     fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             rs_local,
             mesh=mesh,
             in_specs=P(("pod", "data"), None, None),
@@ -315,7 +555,7 @@ def check_nap_extensions():
         )
 
     fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             large_local,
             mesh=mesh,
             in_specs=P(("pod", "data"), None),
@@ -333,10 +573,16 @@ def check_nap_extensions():
 def main():
     assert jax.device_count() == N_DEV, jax.device_count()
     check_allreduce_correctness()
+    check_mla_allreduce()
+    check_ragged_roundtrips()
+    check_auto_dispatch()
+    check_schedule_cache()
     check_internode_message_reduction()
     check_nonpower_mesh()
     check_multiaxis_hierarchy()
     check_grad_sync()
+    check_grad_sync_dtypes()
+    check_grad_sync_mla()
     check_dp_training_nap_equals_psum()
     check_nap_extensions()
     print("RESULTS_JSON:" + json.dumps(RESULTS))

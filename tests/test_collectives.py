@@ -45,6 +45,15 @@ _EXPECTED = [
     "correct_psum",
     "correct_ring",
     "correct_rabenseifner",
+    "correct_mla_pow2",
+    "correct_mla_ragged",
+    "correct_mla_tiny",
+    "correct_mla_multiaxis",
+    "ragged_roundtrip_ring",
+    "ragged_roundtrip_rabenseifner",
+    "ragged_roundtrip_mla",
+    "auto_dispatch_model_driven",
+    "schedule_cache_hits",
     "correct_nap_max",
     "correct_nap_min",
     "hlo_permute_counts",
@@ -52,6 +61,9 @@ _EXPECTED = [
     "correct_nap_multiaxis",
     "grad_sync_nap_mean",
     "grad_sync_compressed",
+    "grad_sync_dtype_semantics",
+    "grad_sync_compressed_dtypes",
+    "grad_sync_mla_mean",
     "dp_train_nap_equals_psum",
     "nap_allgather",
     "nap_reduce_scatter",

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import normalize_cost_analysis
 from repro.launch.hlo_analysis import analyze_hlo
 
 
@@ -38,7 +39,7 @@ def test_scan_multiplies_by_trip_count():
     expected = 17 * 2 * 64**3
     assert st.flops == pytest.approx(expected, rel=0.02)
     # cost_analysis undercounts by ~17x — that's why this module exists
-    cost = (
+    cost = normalize_cost_analysis(
         jax.jit(f).lower(jnp.ones((64, 64))).compile().cost_analysis()
     )
     assert cost["flops"] < expected / 8
@@ -99,6 +100,7 @@ def test_collectives_inside_scan_multiply():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         import sys; sys.path.insert(0, "src")
+        from repro import compat
         from repro.launch.mesh import make_mesh
         from repro.launch.hlo_analysis import analyze_hlo
 
@@ -108,7 +110,7 @@ def test_collectives_inside_scan_multiply():
                 return jax.lax.psum(c, "d"), None
             out, _ = jax.lax.scan(body, x, None, length=6)
             return out
-        g = jax.shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None))
+        g = compat.shard_map(f, mesh=mesh, in_specs=P(None), out_specs=P(None))
         txt = jax.jit(g).lower(jnp.ones((1024,))).compile().as_text()
         st = analyze_hlo(txt)
         # 6 all-reduces of 4 KiB each, wire = 2*size*(7/8)

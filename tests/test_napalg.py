@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import napalg
 
@@ -199,3 +199,94 @@ def test_headline_message_reduction():
     assert napalg.message_counts(nap)["max_per_chip"] == 3
     assert rd.max_internode_messages_per_chip() == 12
     assert smp.max_internode_messages_per_chip() == 12
+
+
+# ---------------------------------------------------------------------------
+# ragged donor rounds: per-chip message bound over a wide sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ppn", [2, 3, 4, 5, 7, 8, 16])
+def test_donor_rounds_message_bound(ppn):
+    """Even with ragged subgroups and donor repair, no chip sends more
+    than one extra inter-node message beyond the step count."""
+    for n_nodes in range(1, 41):
+        sched = napalg.build_nap_schedule(n_nodes, ppn)
+        bound = napalg.nap_num_steps(n_nodes, ppn) + 1
+        counts = napalg.message_counts(sched)
+        assert counts["max_per_chip"] <= bound, (n_nodes, ppn, counts)
+
+
+# ---------------------------------------------------------------------------
+# schedule construction caching (trace-time hot path)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_builders_are_cached():
+    for builder, args in [
+        (napalg.build_nap_schedule, (24, 8)),
+        (napalg.build_rd_schedule, (24, 8)),
+        (napalg.build_smp_schedule, (24, 8)),
+        (napalg.build_mla_schedule, (24, 8)),
+    ]:
+        builder.cache_clear()
+        a = builder(*args)
+        b = builder(*args)
+        assert a is b
+        assert builder.cache_info().hits > 0
+
+
+def test_step_mask_tables_match_schedule():
+    for n_nodes, ppn in [(14, 4), (5, 4), (16, 4), (27, 3)]:
+        sched = napalg.build_nap_schedule(n_nodes, ppn)
+        tables = napalg.step_mask_tables(n_nodes, ppn)
+        assert len(tables) == len(sched.steps)
+        for step, (rmasks, smask) in zip(sched.steps, tables):
+            assert len(rmasks) == len(step.rounds)
+            for rnd, rmask in zip(step.rounds, rmasks):
+                assert set(np.flatnonzero(rmask)) == {d for _, d in rnd}
+            assert set(np.flatnonzero(smask)) == set(step.self_chips)
+        # cached: same object on repeat
+        assert napalg.step_mask_tables(n_nodes, ppn) is tables
+
+
+# ---------------------------------------------------------------------------
+# MLA striped schedule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_nodes,ppn", [(2, 2), (4, 4), (8, 16), (3, 5)])
+def test_mla_schedule_structure(n_nodes, ppn):
+    import math
+
+    sched = napalg.build_mla_schedule(n_nodes, ppn)
+    assert sched.kind == "mla"
+    # recursive halving/doubling: 2*ceil(log2(k)) latency steps per domain
+    li = math.ceil(math.log2(ppn)) if ppn > 1 else 0
+    lo = math.ceil(math.log2(n_nodes)) if n_nodes > 1 else 0
+    assert len(sched.steps) == 2 * (li + lo)
+    # inter-node fractions sum to the per-lane RS byte total per direction
+    inter_frac_sum = sum(
+        step.frac
+        for step in sched.steps
+        if step.combine
+        and any(s // ppn != d // ppn for s, d in step.pairs)
+    )
+    want = (1.0 / ppn) * (n_nodes - 1) / n_nodes if n_nodes > 1 else 0.0
+    assert inter_frac_sum == pytest.approx(want)
+
+
+@pytest.mark.parametrize("n_nodes,ppn", [(2, 4), (4, 4), (8, 16), (64, 16)])
+def test_mla_internode_bytes_are_striped(n_nodes, ppn):
+    """The tentpole claim: per-chip inter-node bytes drop to ~s/ppn."""
+    s = float(1 << 20)
+    mla = napalg.build_mla_schedule(n_nodes, ppn)
+    got = mla.max_internode_bytes_per_chip(s)
+    want = 2.0 * (s / ppn) * (n_nodes - 1) / n_nodes
+    assert got == pytest.approx(want)
+    assert got <= 2.0 * s / ppn  # ~s/ppn per direction, per lane
+    # vs NAP (full payload each step) and RD (full payload, log2(p) steps)
+    nap = napalg.build_nap_schedule(n_nodes, ppn)
+    rd = napalg.build_rd_schedule(n_nodes, ppn)
+    assert got < nap.max_internode_bytes_per_chip(s)
+    assert got < rd.max_internode_bytes_per_chip(s)

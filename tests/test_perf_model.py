@@ -107,18 +107,90 @@ def test_nap_internode_bytes_vs_rd():
     assert nap_bytes < rd_inter * s
 
 
-def test_hierarchical_auto_switch_threshold():
-    """The 'auto' dispatcher must pick NAP below the paper's crossover and
-    the RS+AG path above it (checked at the HLO level in the multi-device
-    suite; here: the decision logic)."""
-    import jax.numpy as jnp
-
+def test_hierarchical_auto_switch_is_model_driven():
+    """The 'auto' dispatcher must take its NAP↔MLA switch point from
+    perf_model.crossover_bytes for the actual grid, not a constant
+    (checked at the HLO level in the multi-device suite; here: the
+    decision logic)."""
     from repro.core import collectives
 
-    small = jnp.zeros((256,), jnp.float32)   # 1 KiB  -> nap
-    large = jnp.zeros((4096,), jnp.float32)  # 16 KiB -> rabenseifner
-    # the dispatcher resolves the algorithm before touching axes; probing
-    # via the size rule it applies:
-    t = 2048
-    assert small.size * small.dtype.itemsize <= t
-    assert large.size * large.dtype.itemsize > t
+    for n, ppn in [(2, 16), (4, 4), (64, 16)]:
+        xo = collectives.auto_crossover_bytes(n, ppn)
+        assert xo == pm.crossover_bytes(n, ppn, pm.TPU_V5E_POD, large="mla")
+        assert collectives.select_algorithm(int(xo) - 8, n, ppn) == "nap"
+        assert collectives.select_algorithm(int(xo) + 8, n, ppn) == "mla"
+    # no slow domain -> plain psum regardless of size
+    assert collectives.select_algorithm(1 << 30, 1, 16) == "psum"
+    # different grids genuinely move the switch point (not one constant)
+    assert (
+        collectives.auto_crossover_bytes(2, 16)
+        != collectives.auto_crossover_bytes(4, 4)
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLA cost model + striped simulator replay
+# ---------------------------------------------------------------------------
+
+
+def test_cost_mla_wins_bandwidth_regime():
+    """MLA must beat NAP (and the SMP-style single-lane path) for large
+    reductions and lose the latency regime to NAP."""
+    for params in [pm.BLUE_WATERS, pm.TPU_V5E_POD]:
+        n, ppn = 64, 16
+        for s in [8.0, 64.0]:
+            assert pm.cost_nap(s, n, ppn, params) < pm.cost_mla(
+                s, n, ppn, params
+            )
+        for s in [1 << 20, 1 << 24]:
+            mla = pm.cost_mla(float(s), n, ppn, params)
+            assert mla < pm.cost_nap(float(s), n, ppn, params)
+            assert mla < pm.cost_smp(float(s), n, ppn, params)
+            assert mla < pm.cost_rd(float(s), n, ppn, params)
+
+
+def test_crossover_mla_is_finite_and_ordered():
+    for n, ppn in [(2, 16), (8, 16), (64, 16), (4, 4)]:
+        xo = pm.crossover_bytes(n, ppn, pm.TPU_V5E_POD, large="mla")
+        assert 8.0 <= xo <= 1 << 22
+        assert pm.cost_nap(xo / 4, n, ppn, pm.TPU_V5E_POD) <= pm.cost_mla(
+            xo / 4, n, ppn, pm.TPU_V5E_POD
+        )
+        assert pm.cost_mla(xo * 4, n, ppn, pm.TPU_V5E_POD) <= pm.cost_nap(
+            xo * 4, n, ppn, pm.TPU_V5E_POD
+        )
+
+
+def test_simulator_mla_striping():
+    """Replaying the striped schedule: per-chip inter-node bytes are
+    ~2*(s/ppn)*(n-1)/n — a ppn-fold drop vs the single-lane path — and
+    the simulated time beats NAP in the bandwidth regime."""
+    n, ppn = 8, 16
+    s = float(1 << 22)
+    got = sim.internode_bytes_per_chip("mla", n, ppn, s)
+    assert got == pytest.approx(2.0 * (s / ppn) * (n - 1) / n)
+    assert got <= 2.0 * s / ppn
+    assert got < sim.internode_bytes_per_chip("nap", n, ppn, s)
+    t_mla = sim.simulate_algorithm("mla", n, ppn, s, pm.TPU_V5E_POD)
+    t_nap = sim.simulate_algorithm("nap", n, ppn, s, pm.TPU_V5E_POD)
+    assert t_mla < t_nap
+    # latency regime: NAP stays the winner
+    t_mla8 = sim.simulate_algorithm("mla", n, ppn, 8.0, pm.TPU_V5E_POD)
+    t_nap8 = sim.simulate_algorithm("nap", n, ppn, 8.0, pm.TPU_V5E_POD)
+    assert t_nap8 < t_mla8
+
+
+def test_simulator_agrees_with_model_crossover():
+    """The simulator's replay must not contradict the model-driven switch:
+    just above the modeled NAP↔MLA crossover, simulated MLA must already
+    beat (or at least match) simulated NAP — the log-step RS/AG
+    realization, not a ring whose alpha-steps would bury the crossover."""
+    for n, ppn in [(8, 16), (64, 16)]:
+        xo = pm.crossover_bytes(n, ppn, pm.TPU_V5E_POD, large="mla")
+        s = 2.0 * xo
+        t_mla = sim.simulate_algorithm("mla", n, ppn, s, pm.TPU_V5E_POD)
+        t_nap = sim.simulate_algorithm("nap", n, ppn, s, pm.TPU_V5E_POD)
+        assert t_mla <= t_nap * 1.1, (n, ppn, s, t_mla, t_nap)
+        # and the simulated time is the same order as the closed form
+        t_model = pm.cost_mla(s, n, ppn, pm.TPU_V5E_POD)
+        assert 0.2 < t_mla / t_model < 5.0, (t_mla, t_model)
