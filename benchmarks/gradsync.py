@@ -9,8 +9,11 @@ under the TPU max-rate parameters, for a realistic bucket-size mix:
   * bandwidth-bound large payloads: fused parameter-gradient buckets.
 
 Compares pure-RD, pure-SMP, pure-NAP, the striped multi-lane MLA path,
-and the model-driven "auto" switch (NAP below the per-grid
-``perf_model.crossover_bytes`` NAP↔MLA crossover, MLA above it).
+the chunked *pipelined* MLA path (model-optimal depth), and the
+model-driven "auto" switch (NAP below the per-grid
+``perf_model.crossover_bytes`` NAP↔MLA crossover, MLA above it,
+pipelined once ``optimal_pipeline_chunks`` says the bucket amortises
+the extra latency steps).
 """
 
 from __future__ import annotations
@@ -28,7 +31,11 @@ _COSTS = {
     "smp": pm.cost_smp,
     "nap": pm.cost_nap,
     "mla": pm.cost_mla,
+    "mla_pip": lambda s, n, ppn, p: pm.cost_mla_pipelined(s, n, ppn, p),
 }
+
+# benchmark label -> simulator algorithm name
+_SIM_NAMES = {"mla_pip": "mla_pipelined"}
 
 # (name, bytes, count) — a ~100M-param model with fused buckets
 BUCKETS = [
@@ -41,7 +48,7 @@ BUCKETS = [
 
 def _bucket_time(algo: str, s: float, n: int, ppn: int) -> float:
     if s <= _SIM_LIMIT:
-        return sim.simulate_algorithm(algo, n, ppn, s, P)
+        return sim.simulate_algorithm(_SIM_NAMES.get(algo, algo), n, ppn, s, P)
     return _COSTS[algo](s, n, ppn, P)
 
 
@@ -49,12 +56,19 @@ def main() -> None:
     rows = []
     for n_pods, ppn in [(2, 16), (8, 16), (64, 16)]:
         crossover = pm.crossover_bytes(n_pods, ppn, P, large="mla")
-        totals = {a: 0.0 for a in ["rd", "smp", "nap", "mla", "auto"]}
+        algos = ["rd", "smp", "nap", "mla", "mla_pip"]
+        totals = {a: 0.0 for a in algos + ["auto"]}
         for _, s, count in BUCKETS:
-            for algo in ["rd", "smp", "nap", "mla"]:
+            for algo in algos:
                 totals[algo] += _bucket_time(algo, float(s), n_pods, ppn) * count
-            # model-driven switch: same decision hierarchical_allreduce makes
-            auto_algo = "nap" if s <= crossover else "mla"
+            # model-driven three-contender switch: the same decision
+            # collectives.select_algorithm makes
+            if s <= crossover:
+                auto_algo = "nap"
+            elif pm.optimal_pipeline_chunks(float(s), n_pods, ppn, P) > 1:
+                auto_algo = "mla_pip"
+            else:
+                auto_algo = "mla"
             totals["auto"] += (
                 _bucket_time(auto_algo, float(s), n_pods, ppn) * count
             )
@@ -85,6 +99,13 @@ def main() -> None:
                 f"gradsync_mla_speedup_vs_smp_pods{n_pods}",
                 totals["smp"] / totals["mla"],
                 "striped lanes",
+            )
+        )
+        rows.append(
+            (
+                f"gradsync_pipelined_speedup_vs_mla_pods{n_pods}",
+                totals["mla"] / totals["mla_pip"],
+                "chunk overlap",
             )
         )
         # the tentpole quantity: per-chip inter-node bytes for one 16 MiB

@@ -142,6 +142,64 @@ def fig18_mla_striping():
     return _emit(rows)
 
 
+def fig19_pipelined_mla():
+    """Beyond-paper: chunked, pipelined MLA (the §VI regime, pipelined).
+
+    Pipeline-depth sweep on a 16x16 grid under the TPU parameters: the
+    replayed wall-time vs chunk count C, the model-optimal depth and its
+    overlap win over unpipelined MLA, plus the ragged-stripe byte
+    accounting (uneven-block lower bound vs pad-to-divisible striping).
+    """
+    rows = []
+    TP = pm.TPU_V5E_POD
+    n, ppn = 16, 16
+    for s in [1 << 20, 4 << 20, 16 << 20, 64 << 20]:
+        mib = s >> 20
+        for c in [1, 2, 4, 8]:
+            t = sim.simulate_algorithm(
+                "mla_pipelined", n, ppn, float(s), TP, chunks=c
+            )
+            rows.append(
+                (f"fig19_sim_pipelined_s{mib}MiB_c{c}", t * 1e6, f"C={c}")
+            )
+        c_star = pm.optimal_pipeline_chunks(float(s), n, ppn, TP)
+        t1 = sim.simulate_algorithm(
+            "mla_pipelined", n, ppn, float(s), TP, chunks=1
+        )
+        t_star = sim.simulate_algorithm(
+            "mla_pipelined", n, ppn, float(s), TP, chunks=c_star
+        )
+        rows.append(
+            (
+                f"fig19_overlap_win_s{mib}MiB",
+                t1 / t_star,
+                f"C*={c_star}",
+            )
+        )
+    # ragged striping: per-chip inter-node bytes hit the uneven-block
+    # lower bound — zero padded bytes cross the slow domain
+    for nn, pp, e in [(5, 3, 12289), (14, 4, 99999)]:
+        lb = napalg.mla_internode_lower_bound(nn, pp, e) * 4.0
+        got = sim.internode_bytes_per_chip("mla", nn, pp, e * 4.0, elems=e)
+        padded_stripe = math.ceil(e / pp)
+        padded = 2.0 * math.ceil(padded_stripe / nn) * (nn - 1) * 4.0
+        rows.append(
+            (
+                f"fig19_ragged_KB_per_chip_n{nn}_ppn{pp}",
+                got / 1024,
+                f"lower_bound={'yes' if abs(got - lb) < 1e-6 else 'NO'}",
+            )
+        )
+        rows.append(
+            (
+                f"fig19_padded_KB_per_chip_n{nn}_ppn{pp}",
+                padded / 1024,
+                "pad-to-divisible",
+            )
+        )
+    return _emit(rows)
+
+
 def fig16_overhead():
     """Figs 16/17 analogue: per-step dispatch overhead vs fused schedule.
 
@@ -221,5 +279,6 @@ ALL = [
     fig14_sim_sizes,
     fig16_overhead,
     fig18_mla_striping,
+    fig19_pipelined_mla,
     table_msgcounts,
 ]

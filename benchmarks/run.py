@@ -6,9 +6,10 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   * roofline_report — per-(arch x shape) roofline terms, if dry-run
                       artifacts exist under reports/dryrun/
 
-``--quick`` runs a CPU smoke instead: one NAP shape (latency regime) and
-one MLA shape (bandwidth regime) are *executed* end to end on a virtual
-2x4 device mesh, checked against the NumPy oracle and timed — so perf or
+``--quick`` runs a CPU smoke instead: one NAP shape (latency regime),
+one MLA shape (bandwidth regime) and one chunk-pipelined MLA shape
+(ragged payload, C=2) are *executed* end to end on a virtual 2x4 device
+mesh, checked against the NumPy oracle and timed — so perf or
 correctness regressions on the hot path are catchable without hardware.
 """
 
@@ -46,7 +47,13 @@ def quick_smoke() -> int:
     rng = np.random.default_rng(0)
     failures = 0
     print("name,us_per_call,derived")
-    for algo, size in [("nap", 8), ("mla", 1 << 16)]:
+    cases = [
+        ("nap", 8, {}),
+        ("mla", 1 << 16, {}),
+        # ragged payload through the chunked lowering
+        ("mla_pipelined", (1 << 16) + 37, {"pipeline_chunks": 2}),
+    ]
+    for algo, size, kw in cases:
         xs = jnp.asarray(rng.normal(size=(8, size)).astype(np.float32))
         fn = jax.jit(
             compat.shard_map(
@@ -54,6 +61,7 @@ def quick_smoke() -> int:
                     collectives.ALGORITHMS[algo],
                     inter_axes="pod",
                     intra_axes="data",
+                    **kw,
                 ),
                 mesh=mesh,
                 in_specs=P(("pod", "data")),

@@ -26,12 +26,21 @@ Algorithms:
   is striped across local ranks (intra ``psum_scatter``), every lane runs
   reduce-scatter + allgather over the slow domain concurrently with
   ``s/ppn`` bytes, then an intra ``all_gather`` rebuilds the payload.  The
-  bandwidth-regime engine (§VI future work, executed).
-* :func:`hierarchical_allreduce` — three-regime dispatcher: NAP for small
-  payloads (latency regime), MLA for large ones (bandwidth regime), plain
-  psum when the mesh has no slow domain.  The NAP↔MLA switch point comes
-  from the §IV cost model (:func:`perf_model.crossover_bytes`) for the
-  actual grid shape, not a hardcoded constant.
+  bandwidth-regime engine (§VI future work, executed).  Supports
+  ``op="sum"|"max"|"min"`` (dtype-aware pad identities) and
+  ``pipeline_chunks=C``: the payload is split into ``C`` ragged chunks
+  (``napalg.ragged_splits`` — no pad elements) whose independent
+  collectives XLA can overlap, chunk ``c``'s inter-pod phase against
+  chunk ``c+1``'s intra-pod phase.
+* :func:`hierarchical_allreduce` — op-safe three-regime dispatcher: NAP
+  for small payloads (latency regime), MLA for large ones (bandwidth
+  regime, pipelined above the model's chunking threshold), plain psum
+  when the mesh has no slow domain.  The NAP↔MLA switch point comes from
+  the §IV cost model (:func:`perf_model.crossover_bytes`) for the actual
+  grid shape, not a hardcoded constant; the MLA↔pipelined-MLA depth comes
+  from :func:`perf_model.optimal_pipeline_chunks`.  Degenerate grids fall
+  back identically in both threshold modes (fixed and modeled): ``psum``
+  for ``n <= 1``, RS+AG for ``ppn == 1``.
 """
 
 from __future__ import annotations
@@ -54,6 +63,7 @@ __all__ = [
     "ring_allreduce",
     "rabenseifner_allreduce",
     "mla_allreduce",
+    "mla_pipelined_allreduce",
     "hierarchical_allreduce",
     "select_algorithm",
     "auto_crossover_bytes",
@@ -73,6 +83,34 @@ _OPS: dict[str, tuple[Callable, Callable, float]] = {
     "max": (jnp.maximum, lax.pmax, -jnp.inf),
     "min": (jnp.minimum, lax.pmin, jnp.inf),
 }
+
+# ops each bandwidth-regime engine can execute; the dispatcher never
+# routes an op to an engine outside its set (op-safe dispatch)
+_MLA_OPS = frozenset({"sum", "max", "min"})
+
+# axis-wise reducers for the explicit (non-psum_scatter) reduce-scatter
+_AXIS_REDUCERS: dict[str, Callable] = {
+    "sum": jnp.sum,
+    "max": jnp.max,
+    "min": jnp.min,
+}
+
+
+def _op_identity(op: str, dtype) -> jax.Array:
+    """Dtype-correct reduction identity (used for ragged padding).
+
+    ``sum`` pads with zeros of the payload dtype; ``max``/``min`` use the
+    dtype's own extremes — ``jnp.iinfo`` bounds for integers (a float
+    ``-inf`` would silently promote integer payloads to float) and
+    ``±inf`` for floats (representable in f32/bf16/f16).
+    """
+    dtype = jnp.dtype(dtype)
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.asarray(info.min if op == "max" else info.max, dtype)
+    return jnp.asarray(-jnp.inf if op == "max" else jnp.inf, dtype)
 
 
 def _chip_index(inter_axes: tuple[str, ...], intra_axes: tuple[str, ...]):
@@ -121,7 +159,7 @@ def nap_allreduce(
       op: "sum" | "max" | "min".
     """
     inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
-    fold, named_reduce, ident = _OPS[op]
+    fold, named_reduce, _ = _OPS[op]
     n = int(np.prod([compat.axis_size(ax) for ax in inter]))
     ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
     sched = napalg.build_nap_schedule(n, ppn)
@@ -131,9 +169,10 @@ def nap_allreduce(
     if not sched.steps:
         return v
     chip = _chip_index(inter, intra)
-    if op == "sum":
-        # keep integer payloads integer (a weak-typed 0.0 would promote)
-        ident = jnp.zeros((), v.dtype)
+    # dtype-correct identity for every op: integer max/min must use the
+    # iinfo extremes (a float ±inf identity silently promoted integer
+    # payloads to float), and sum must stay in the payload dtype.
+    ident = _op_identity(op, v.dtype)
     # Host-constant mask tables (cached per (n, ppn)) + a single masked
     # accumulation per round: the accumulator starts from the self
     # contribution instead of an identity-filled temporary, so each
@@ -243,7 +282,11 @@ def ring_allreduce(
     flat = x.reshape(-1)
     pad = (-flat.size) % p
     if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        # op-correct pad identity: zeros would corrupt max over
+        # all-negative payloads (and min over all-positive ones)
+        flat = jnp.concatenate(
+            [flat, jnp.full((pad,), _op_identity(op, flat.dtype))]
+        )
     chunks = flat.reshape(p, -1)
     idx = 0
     for a in ax:
@@ -292,12 +335,17 @@ def rabenseifner_allreduce(
     """Reduce-scatter + allgather via native XLA collectives ([5], [8]).
 
     Optimal data transport with ``2 log2(p)`` message steps; the paper's
-    recommended regime for reductions above ~2 KiB.  XLA emits
-    ``reduce-scatter`` + ``all-gather`` directly, so on TPU this also
-    enjoys ICI pipelining.
+    recommended regime for reductions above ~2 KiB.  For ``sum`` XLA
+    emits ``reduce-scatter`` + ``all-gather`` directly, so on TPU this
+    also enjoys ICI pipelining.  ``max``/``min`` (which
+    ``lax.psum_scatter`` cannot express) realize the reduce-scatter as
+    ``all_to_all`` + a local fold — identical byte transport
+    (``(p-1)/p * s`` each way) — with dtype-correct pad identities.
     """
-    if op != "sum":
-        raise NotImplementedError("rabenseifner path supports sum only")
+    if op not in _MLA_OPS:
+        raise NotImplementedError(
+            f"rabenseifner path supports {sorted(_MLA_OPS)}, got {op!r}"
+        )
     ax = _as_tuple(axes)
     p = int(np.prod([compat.axis_size(a) for a in ax]))
     if p == 1:
@@ -306,8 +354,19 @@ def rabenseifner_allreduce(
     flat = x.reshape(-1)
     pad = (-flat.size) % p
     if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    shard = lax.psum_scatter(flat.reshape(p, -1), ax, scatter_dimension=0, tiled=False)
+        flat = jnp.concatenate(
+            [flat, jnp.full((pad,), _op_identity(op, flat.dtype))]
+        )
+    tiles = flat.reshape(p, -1)
+    if op == "sum":
+        shard = lax.psum_scatter(tiles, ax, scatter_dimension=0, tiled=False)
+    else:
+        # reduce-scatter(max/min): every chip scatters tile j to chip j,
+        # receives all chips' copies of its own tile, folds locally
+        gathered = lax.all_to_all(
+            tiles[:, None, :], ax, split_axis=0, concat_axis=1, tiled=False
+        )
+        shard = _AXIS_REDUCERS[op](gathered[0], axis=0)
     out = lax.all_gather(shard, ax, axis=0, tiled=False).reshape(-1)
     if pad:
         out = out[: out.size - pad]
@@ -319,20 +378,60 @@ def rabenseifner_allreduce(
 # ---------------------------------------------------------------------------
 
 
+def _mla_one_chunk(
+    flat: jax.Array,
+    inter: tuple[str, ...],
+    intra: tuple[str, ...],
+    n: int,
+    ppn: int,
+    op: str,
+) -> jax.Array:
+    """One chunk of the MLA allreduce (flat 1-D payload in, same out)."""
+    size = flat.size
+    pad = (-size) % ppn
+    if pad:
+        # the pad identity never crosses the slow domain logically: the
+        # ragged schedule/accounting (napalg.mla_stripe_geometry) charges
+        # only real elements, and the identity is op/dtype-correct so the
+        # result is exact either way
+        flat = jnp.concatenate(
+            [flat, jnp.full((pad,), _op_identity(op, flat.dtype))]
+        )
+    tiles = flat.reshape(ppn, -1)
+    if op == "sum":
+        # phase 1: stripe the pod partial across local ranks
+        stripe = lax.psum_scatter(tiles, intra, scatter_dimension=0, tiled=False)
+    else:
+        gathered = lax.all_to_all(
+            tiles[:, None, :], intra, split_axis=0, concat_axis=1, tiled=False
+        )
+        stripe = _AXIS_REDUCERS[op](gathered[0], axis=0)
+    # phase 2: per-lane RS+AG across the slow domain (ppn parallel lanes)
+    if n > 1:
+        stripe = rabenseifner_allreduce(stripe, axes=inter, op=op)
+    # phase 3: rebuild the full payload inside the pod
+    out = lax.all_gather(stripe, intra, axis=0, tiled=False).reshape(-1)
+    if pad:
+        out = out[: out.size - pad]
+    return out
+
+
 def mla_allreduce(
     x: jax.Array,
     *,
     inter_axes: AxisNames,
     intra_axes: AxisNames,
     op: str = "sum",
+    pipeline_chunks: int = 1,
 ) -> jax.Array:
     """Multi-lane node-aware allreduce (the bandwidth-regime engine).
 
     Three phases, mirroring :func:`napalg.build_mla_schedule`:
 
-      1. intra-pod ``psum_scatter`` stripes the pod-local partial across
+      1. intra-pod reduce-scatter stripes the pod-local partial across
          the ``ppn`` local ranks — rank ``r`` owns stripe ``r`` of
-         ``s/ppn`` bytes;
+         ``s/ppn`` bytes (``psum_scatter`` for sum; ``all_to_all`` + a
+         local fold for max/min, same byte transport);
       2. every lane ``r`` runs an independent reduce-scatter + allgather
          over ``inter_axes`` — all ``ppn`` lanes cross the slow domain
          concurrently with ``s/ppn`` bytes each, instead of every chip
@@ -343,9 +442,21 @@ def mla_allreduce(
     Per-chip inter-node traffic is ``~2*(s/ppn)*(n-1)/n`` — the data lower
     bound divided across all local ranks — which is why this wins the
     large-message regime the paper's §VI leaves as future work.
+
+    ``pipeline_chunks=C > 1`` splits the payload into ``C`` *ragged*
+    chunks (:func:`napalg.ragged_splits` — uneven sizes, no pad elements
+    at the chunk level) and runs the three phases per chunk.  The chunks
+    carry no data dependencies on each other, so XLA's async collectives
+    can overlap chunk ``c``'s inter-pod phase with chunk ``c±1``'s
+    intra-pod phases (ICI vs DCI — distinct networks), the chunk-level
+    overlap of Träff's doubly-pipelined scheme.  The model-optimal depth
+    comes from :func:`perf_model.optimal_pipeline_chunks`; the ``auto``
+    dispatcher applies it for payloads past the chunking threshold.
     """
-    if op != "sum":
-        raise NotImplementedError("mla path supports sum only")
+    if op not in _MLA_OPS:
+        raise NotImplementedError(
+            f"mla path supports {sorted(_MLA_OPS)}, got {op!r}"
+        )
     inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
     ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
     n = int(np.prod([compat.axis_size(ax) for ax in inter]))
@@ -353,21 +464,59 @@ def mla_allreduce(
         return rabenseifner_allreduce(x, axes=inter, op=op)
     orig_shape, orig_dtype = x.shape, x.dtype
     flat = x.reshape(-1)
-    pad = (-flat.size) % ppn
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    # phase 1: stripe the pod partial across local ranks
-    stripe = lax.psum_scatter(
-        flat.reshape(ppn, -1), intra, scatter_dimension=0, tiled=False
-    )
-    # phase 2: per-lane RS+AG across the slow domain (ppn parallel lanes)
-    if n > 1:
-        stripe = rabenseifner_allreduce(stripe, axes=inter, op=op)
-    # phase 3: rebuild the full payload inside the pod
-    out = lax.all_gather(stripe, intra, axis=0, tiled=False).reshape(-1)
-    if pad:
-        out = out[: out.size - pad]
+    chunks = max(1, min(int(pipeline_chunks), flat.size))
+    if chunks == 1:
+        out = _mla_one_chunk(flat, inter, intra, n, ppn, op)
+        return out.reshape(orig_shape).astype(orig_dtype)
+    parts = []
+    off = 0
+    for ce in napalg.ragged_splits(flat.size, chunks):
+        if ce == 0:
+            continue
+        parts.append(
+            _mla_one_chunk(flat[off : off + ce], inter, intra, n, ppn, op)
+        )
+        off += ce
+    out = jnp.concatenate(parts)
     return out.reshape(orig_shape).astype(orig_dtype)
+
+
+def mla_pipelined_allreduce(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames,
+    op: str = "sum",
+    pipeline_chunks: int | None = None,
+    params=None,
+) -> jax.Array:
+    """MLA with the pipeline depth solved from the §IV cost model.
+
+    ``pipeline_chunks=None`` asks :func:`perf_model.optimal_pipeline_chunks`
+    for the depth that balances the extra per-chunk alpha steps against
+    the intra/inter overlap for this payload and grid — the same decision
+    the simulator replays and ``select_algorithm`` dispatches on.  Pass
+    the same ``params`` (MachineParams) given to ``select_algorithm`` so
+    the dispatch decision and the executed depth are solved under one
+    machine model (default: TPU_V5E_POD, matching the dispatcher).
+    """
+    if pipeline_chunks is None:
+        from . import perf_model as pm
+
+        inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+        n = int(np.prod([compat.axis_size(ax) for ax in inter]))
+        ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
+        nbytes = float(int(np.prod(x.shape)) * x.dtype.itemsize)
+        pipeline_chunks = pm.optimal_pipeline_chunks(
+            nbytes, n, ppn, params or pm.TPU_V5E_POD
+        )
+    return mla_allreduce(
+        x,
+        inter_axes=inter_axes,
+        intra_axes=intra_axes,
+        op=op,
+        pipeline_chunks=pipeline_chunks,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +534,7 @@ ALGORITHMS: dict[str, Callable] = {
     "rd": rd_allreduce,
     "smp": smp_allreduce,
     "mla": mla_allreduce,
+    "mla_pipelined": mla_pipelined_allreduce,
     "psum": _psum_allreduce,
 }
 
@@ -412,19 +562,54 @@ def auto_crossover_bytes(n: int, ppn: int, params=None) -> float:
 
 
 def select_algorithm(
-    nbytes: int, n: int, ppn: int, params=None
+    nbytes: int,
+    n: int,
+    ppn: int,
+    params=None,
+    op: str = "sum",
+    small_threshold_bytes: int | None = None,
 ) -> str:
-    """The three-regime dispatch decision (host-side, trace-static).
+    """The op-safe three-regime dispatch decision (host-side, static).
 
     * no slow domain (``n <= 1``) — "psum": single-level native reduce;
-    * ``nbytes`` at or below the modeled crossover — "nap": latency regime,
+    * ``ppn == 1`` — "mla" (degenerates to RS+AG over the slow domain):
+      NAP needs ``ppn >= 2`` to trade steps for lanes, in *both*
+      threshold modes;
+    * ``nbytes`` at or below the crossover — "nap": latency regime,
       ``log_ppn(n)`` inter-node steps;
-    * above it — "mla": bandwidth regime, ``ppn`` striped lanes of
-      ``s/ppn`` bytes.
+    * above it — the bandwidth regime, itself a model contest:
+      "mla_pipelined" when :func:`perf_model.optimal_pipeline_chunks`
+      says chunk-level intra/inter overlap pays for its extra alpha
+      steps, plain "mla" otherwise.
+
+    ``op`` guards the decision: the striped engines only run ops in
+    ``_MLA_OPS`` (sum/max/min, with dtype-aware identities); any other
+    registered op stays on NAP, which folds with the op directly —
+    dispatch can no longer route a payload to an engine that would raise
+    at trace time.  ``small_threshold_bytes`` overrides the modeled
+    crossover with a fixed byte threshold; the degenerate-grid fallbacks
+    above apply identically.
     """
     if n <= 1:
         return "psum"
-    return "nap" if nbytes <= auto_crossover_bytes(n, ppn, params) else "mla"
+    if op not in _MLA_OPS:
+        # op unsupported by the striped engines: NAP handles every
+        # registered op (ppn == 1 has no NAP; fall back to single psum
+        # over the joint grid, which is always op-correct)
+        return "nap" if ppn > 1 else "psum"
+    threshold = (
+        float(small_threshold_bytes)
+        if small_threshold_bytes is not None
+        else auto_crossover_bytes(n, ppn, params)
+    )
+    if ppn > 1 and nbytes <= threshold:
+        return "nap"
+    from . import perf_model as pm
+
+    chunks = pm.optimal_pipeline_chunks(
+        float(nbytes), n, ppn, params or pm.TPU_V5E_POD
+    )
+    return "mla_pipelined" if chunks > 1 else "mla"
 
 
 def hierarchical_allreduce(
@@ -435,25 +620,34 @@ def hierarchical_allreduce(
     algorithm: str = "auto",
     op: str = "sum",
     small_threshold_bytes: int | None = None,
+    pipeline_chunks: int | None = None,
 ) -> jax.Array:
     """Allreduce over a two-level hierarchy with a model-driven switch.
 
     ``algorithm="auto"`` consults :func:`select_algorithm`: NAP below the
     :func:`perf_model.crossover_bytes` NAP↔MLA crossover for this grid
     (the paper measured ~2 KiB on Blue Waters at 32 768 processes), the
-    striped multi-lane MLA path above it, and plain psum when there is no
-    slow domain.  Pass ``small_threshold_bytes`` to override the modeled
-    crossover with a fixed byte threshold.
+    striped multi-lane MLA path above it — chunk-pipelined when
+    :func:`perf_model.optimal_pipeline_chunks` says the payload amortises
+    the extra latency steps — and plain psum when there is no slow
+    domain.  The dispatch is op-aware: max/min run the striped engines
+    with dtype-correct identities, anything else stays on NAP.
+
+    Pass ``small_threshold_bytes`` to override the modeled crossover with
+    a fixed byte threshold; degenerate grids (``n <= 1`` → psum,
+    ``ppn == 1`` → RS+AG) fall back identically in both threshold modes.
+    ``pipeline_chunks`` pins the MLA pipeline depth (None = model-driven
+    for the pipelined path, unpipelined otherwise).
     """
     if algorithm == "auto":
         nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
         inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
         n = int(np.prod([compat.axis_size(ax) for ax in inter]))
         ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
-        if small_threshold_bytes is not None:
-            algorithm = "nap" if nbytes <= small_threshold_bytes else "mla"
-        else:
-            algorithm = select_algorithm(nbytes, n, ppn)
+        algorithm = select_algorithm(
+            nbytes, n, ppn, op=op,
+            small_threshold_bytes=small_threshold_bytes,
+        )
     if algorithm == "ring":
         return ring_allreduce(
             x, axes=_as_tuple(inter_axes) + _as_tuple(intra_axes), op=op
@@ -467,4 +661,12 @@ def hierarchical_allreduce(
         local = named_reduce(x, _as_tuple(intra_axes))
         return rabenseifner_allreduce(local, axes=inter_axes, op=op)
     fn = ALGORITHMS[algorithm]
+    if algorithm in ("mla", "mla_pipelined") and pipeline_chunks is not None:
+        return fn(
+            x,
+            inter_axes=inter_axes,
+            intra_axes=intra_axes,
+            op=op,
+            pipeline_chunks=pipeline_chunks,
+        )
     return fn(x, inter_axes=inter_axes, intra_axes=intra_axes, op=op)

@@ -14,9 +14,12 @@ Features, per the "distributed optimisation tricks" requirement:
   crossover (``perf_model.crossover_bytes`` for the actual grid shape;
   the paper measured ~2 KiB on Blue Waters) go through NAP (latency
   regime, the contribution); large buckets go through the striped
-  multi-lane MLA path (bandwidth regime, ``s/ppn`` bytes per lane);
-  single-level meshes use plain psum — §VI's hybrid, with the switch
-  point solved from §IV instead of hardcoded.
+  multi-lane MLA path (bandwidth regime, ``s/ppn`` bytes per lane) —
+  chunk-*pipelined* once ``perf_model.optimal_pipeline_chunks`` says the
+  bucket amortises the extra latency steps, so the biggest fused
+  parameter buckets overlap their intra-pod striping with the inter-pod
+  transfers; single-level meshes use plain psum — §VI's hybrid, with
+  every switch point solved from §IV instead of hardcoded.
 * *flat-bucket fusion*: small leaves are concatenated into one flat buffer
   so the whole latency-bound sync costs a single NAP schedule rather than
   one collective per tensor.
@@ -60,6 +63,11 @@ class GradSyncConfig:
       bucket bound.  ``None`` (default) derives it from the §IV cost model
       (:func:`collectives.auto_crossover_bytes`) for the actual grid.
     fuse_small_buckets: concatenate small leaves into one flat payload.
+    pipeline_chunks: MLA pipeline depth for bandwidth-regime buckets.
+      ``None`` (default) lets the model pick per bucket
+      (:func:`perf_model.optimal_pipeline_chunks` — large fused buckets
+      get chunk-level intra/inter overlap, small ones stay unpipelined);
+      an int pins the depth.
     """
 
     algorithm: str = "auto"
@@ -67,6 +75,7 @@ class GradSyncConfig:
     compress_bits: int | None = None
     small_threshold_bytes: int | None = None
     fuse_small_buckets: bool = True
+    pipeline_chunks: int | None = None
 
 
 # fallback fusion bound when no slow domain exists (nothing to switch;
@@ -100,6 +109,7 @@ def _one_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
         intra_axes=intra_axes,
         algorithm=cfg.algorithm,
         small_threshold_bytes=cfg.small_threshold_bytes,
+        pipeline_chunks=cfg.pipeline_chunks,
     )
 
 

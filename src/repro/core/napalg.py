@@ -27,15 +27,31 @@ the target subgroup — the one with ``local rank == its own subgroup index``
 to the idle process"; the Fig. 9 example P14 <- P34 is reproduced in the
 unit tests).  The donor does not need to receive anything back.
 
-The schedule is consumed by three independent clients:
+Beyond the paper, this module also builds the *bandwidth-regime* MLA
+schedules: ``build_mla_schedule`` (striped multi-lane RS+AG; with an
+``elems`` payload size the stripes are **ragged** — uneven blocks from
+``ragged_splits``/``mla_stripe_geometry``, so per-chip inter-node bytes
+equal the uneven-block lower bound ``mla_internode_lower_bound`` and no
+padded bytes cross the slow domain) and ``build_mla_pipelined_schedule``
+(the payload split into ``C`` ragged chunks whose ``P2PStep``s carry
+per-chunk fractions, chunk tags and ``dep`` chains so chunk ``c``'s
+inter-pod phases overlap chunk ``c±1``'s intra-pod phases in the
+simulator's port-contention replay).
+
+The schedules are consumed by three independent clients:
 
 * ``repro.core.collectives`` lowers each step to one (or more)
-  ``jax.lax.ppermute`` calls over the joint device mesh axes;
+  ``jax.lax.ppermute`` calls over the joint device mesh axes (the MLA
+  flavours lower to native RS/AG collectives, taking their *chunk*
+  boundaries from the same ``ragged_splits``; within a chunk the SPMD
+  lowering still pads stripes to uniform shapes — the zero-padded-bytes
+  guarantee is a property of this schedule/accounting layer, which is
+  what the dispatcher's cost decisions consume);
 * ``repro.core.simulator`` replays the message lists under the max-rate
   performance model to produce the paper's "measured" figures;
-* the test-suite executes the schedule with a NumPy interpreter
-  (``simulate_allreduce``) and checks it against ``np.sum``/``max``/... for
-  a wide (n_nodes, ppn) sweep.
+* the test-suite executes the schedules with NumPy interpreters
+  (``simulate_allreduce`` / ``simulate_mla_allreduce``) and checks them
+  against ``np.sum``/``max``/... for a wide (n_nodes, ppn) sweep.
 
 Chip numbering is SMP-style (paper §III): ``chip = node * ppn + rank``.
 """
@@ -44,7 +60,7 @@ from __future__ import annotations
 
 import functools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dataclass_replace
 from typing import Callable, Sequence
 
 import numpy as np
@@ -56,9 +72,14 @@ __all__ = [
     "build_rd_schedule",
     "build_smp_schedule",
     "build_mla_schedule",
+    "build_mla_pipelined_schedule",
+    "ragged_splits",
+    "mla_stripe_geometry",
+    "mla_internode_lower_bound",
     "step_mask_tables",
     "p2p_recv_masks",
     "simulate_allreduce",
+    "simulate_mla_allreduce",
     "nap_num_steps",
     "message_counts",
 ]
@@ -319,11 +340,32 @@ class P2PStep:
     ``frac`` is the fraction of the full reduction payload each message of
     this step carries (1.0 for whole-payload exchanges; striped schedules
     like MLA move ``1/ppn`` or ``1/(n*ppn)`` of the bytes per message).
+
+    Ragged / pipelined extensions:
+
+    ``fracs`` (optional) gives a *per-pair* payload fraction, overriding
+    the scalar ``frac`` — uneven-block (ragged) stripes make messages of
+    one step carry different byte counts.  ``chunk`` tags the pipeline
+    chunk this step belongs to, and ``dep`` is the index (into the owning
+    schedule's ``steps``) of the same-chunk predecessor that must complete
+    before this step may start (``-1`` for none).  Steps of *different*
+    chunks carry no data dependency — only per-chip, per-domain port
+    contention serialises them, which is exactly the overlap the
+    pipelined MLA engine exploits.
     """
 
     pairs: tuple[tuple[int, int], ...]
     combine: bool = True
     frac: float = 1.0
+    fracs: tuple[float, ...] | None = None
+    chunk: int = 0
+    dep: int = -1
+
+    def pair_fracs(self) -> tuple[float, ...]:
+        """Per-pair payload fractions (scalar ``frac`` broadcast)."""
+        if self.fracs is not None:
+            return self.fracs
+        return (self.frac,) * len(self.pairs)
 
 
 @dataclass(frozen=True)
@@ -334,6 +376,7 @@ class P2PSchedule:
     ppn: int
     steps: tuple[P2PStep, ...]
     kind: str = "generic"
+    chunks: int = 1
 
     @property
     def n_chips(self) -> int:
@@ -352,9 +395,9 @@ class P2PSchedule:
         reduction — the quantity the striped MLA path divides by ppn."""
         sends = np.zeros(self.n_chips, dtype=np.float64)
         for step in self.steps:
-            for src, dst in step.pairs:
+            for (src, dst), f in zip(step.pairs, step.pair_fracs()):
                 if src // self.ppn != dst // self.ppn:
-                    sends[src] += step.frac * s
+                    sends[src] += f * s
         return float(sends.max(initial=0.0))
 
 
@@ -447,8 +490,186 @@ def build_smp_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
     return P2PSchedule(n_nodes, ppn, tuple(steps), kind="smp")
 
 
+def ragged_splits(total: int, k: int) -> tuple[int, ...]:
+    """Split ``total`` items into ``k`` blocks with sizes differing <= 1.
+
+    Larger blocks come first (matching :func:`_balanced_split`).  This is
+    the single source of truth for the *ragged* (uneven-block) stripe and
+    chunk geometry: the schedule builders, the executed
+    ``collectives.mla_allreduce`` lowering and the NumPy oracle all derive
+    their offsets from it, so no zero padding is ever introduced.
+    """
+    if k < 1:
+        raise ValueError("k must be positive")
+    base, rem = divmod(total, k)
+    return tuple(base + 1 if i < rem else base for i in range(k))
+
+
+def mla_stripe_geometry(
+    n_nodes: int, ppn: int, elems: int
+) -> tuple[tuple[int, ...], tuple[tuple[int, ...], ...]]:
+    """Ragged MLA stripe geometry for an ``elems``-element payload.
+
+    Returns ``(stripes, blocks)`` where ``stripes[r]`` is the element
+    count of lane ``r``'s stripe (the intra reduce-scatter output) and
+    ``blocks[r][j]`` is the element count of node ``j``'s sub-block of
+    stripe ``r`` (the per-lane inter-node reduce-scatter output).  All
+    sizes differ by at most one — no padded elements exist, so none can
+    cross the slow domain.
+    """
+    stripes = ragged_splits(elems, ppn)
+    blocks = tuple(ragged_splits(sr, n_nodes) for sr in stripes)
+    return stripes, blocks
+
+
+def mla_internode_lower_bound(n_nodes: int, ppn: int, elems: int) -> int:
+    """Uneven-block lower bound on per-chip inter-node *elements* sent.
+
+    The chip of lane ``r`` on node ``j`` must push its contributions to
+    every sub-block it does not own across the slow domain during the
+    reduce-scatter (``stripes[r] - blocks[r][j]`` elements) and the same
+    amount back during the allgather.  The binding chip is the one owning
+    the smallest sub-block of the largest stripe.
+    """
+    if n_nodes <= 1:
+        return 0
+    stripes, blocks = mla_stripe_geometry(n_nodes, ppn, elems)
+    worst = max(
+        (sr - min(bl) for sr, bl in zip(stripes, blocks) if sr > 0),
+        default=0,
+    )
+    return 2 * worst
+
+
+def _phase_weights(k: int) -> list[float]:
+    """Normalised per-step weights of a k-way halving RS (sum to 1)."""
+    if k <= 1:
+        return []
+    n_steps = math.ceil(math.log2(k))
+    raw = [2.0 ** -(i + 1) for i in range(n_steps)]
+    tot = sum(raw)
+    return [f / tot for f in raw]
+
+
+def _mla_phase_steps(
+    n_nodes: int,
+    ppn: int,
+    elems: int | None,
+    scale: float,
+    chunk: int,
+) -> tuple[list[P2PStep], list[P2PStep], list[P2PStep], list[P2PStep]]:
+    """The four MLA phases as step lists (intra-RS, inter-RS, inter-AG,
+    intra-AG).
+
+    ``elems=None`` produces the even (divisibility-assumed) fractions of
+    the original builder; an integer ``elems`` produces *ragged* per-pair
+    fractions from :func:`mla_stripe_geometry` — each chip's sent bytes
+    across a phase total exactly its uneven-block share, with zero padded
+    bytes.  ``scale`` multiplies every fraction (chunked schedules pass
+    the chunk's share of the payload); ``chunk`` tags the emitted steps.
+    """
+    intra_w = _phase_weights(ppn)
+    inter_w = _phase_weights(n_nodes)
+    li, lo = len(intra_w), len(inter_w)
+
+    if elems is None:
+        # even fractions, rescaled so phase byte totals are exactly
+        # (k-1)/k of the phase payload (the divisible-stripe ideal)
+        intra_tot = [(ppn - 1) / ppn] * (n_nodes * ppn)
+        inter_tot = [(1.0 / ppn) * (n_nodes - 1) / n_nodes] * (
+            n_nodes * ppn
+        )
+    else:
+        stripes, blocks = mla_stripe_geometry(n_nodes, ppn, elems)
+        e = float(max(elems, 1))
+        intra_tot = [
+            (elems - stripes[r]) / e
+            for _ in range(n_nodes)
+            for r in range(ppn)
+        ]
+        inter_tot = [
+            (stripes[r] - blocks[r][node]) / e
+            for node in range(n_nodes)
+            for r in range(ppn)
+        ]
+
+    def _wsum(k: int, bits: Sequence[int], weights: Sequence[float]):
+        """Per-position sum of the weights of the steps it takes part in.
+
+        Non-power counts skip a position in steps where its partner does
+        not exist; normalising by this sum keeps each chip's *phase*
+        byte total exact (ragged accounting) instead of losing the
+        skipped steps' weight mass.
+        """
+        out = [0.0] * k
+        for bit, w in zip(bits, weights):
+            for j in range(k):
+                if (j ^ bit) < k:
+                    out[j] += w
+        return out
+
+    intra_bits = [1 << (li - 1 - i) for i in range(li)]
+    inter_bits = [1 << (lo - 1 - i) for i in range(lo)]
+    intra_wsum = _wsum(ppn, intra_bits, intra_w)
+    inter_wsum = _wsum(n_nodes, inter_bits, inter_w)
+
+    def step(bit: int, w: float, combine: bool, inter: bool) -> P2PStep:
+        pairs: list[tuple[int, int]] = []
+        fr: list[float] = []
+        for node in range(n_nodes):
+            for r in range(ppn):
+                if inter:
+                    if (node ^ bit) >= n_nodes:
+                        continue
+                    pair = (node * ppn + r, (node ^ bit) * ppn + r)
+                    wn = w if elems is None else w / inter_wsum[node]
+                else:
+                    if (r ^ bit) >= ppn:
+                        continue
+                    pair = (node * ppn + r, node * ppn + (r ^ bit))
+                    wn = w if elems is None else w / intra_wsum[r]
+                tot = (inter_tot if inter else intra_tot)[pair[0]]
+                f = wn * tot * scale
+                if f <= 0.0:
+                    continue  # ragged zero-size message: never sent
+                pairs.append(pair)
+                fr.append(f)
+        if elems is None and pairs and len(set(fr)) == 1:
+            # even, uniform fractions: keep the scalar-``frac`` form
+            return P2PStep(
+                tuple(pairs), combine=combine, frac=fr[0], chunk=chunk
+            )
+        return P2PStep(
+            tuple(pairs), combine=combine, fracs=tuple(fr), chunk=chunk
+        )
+
+    intra_rs = [
+        step(intra_bits[i], intra_w[i], True, False) for i in range(li)
+    ]
+    inter_rs = [
+        step(inter_bits[i], inter_w[i], True, True) for i in range(lo)
+    ]
+    rev_inter = list(reversed(inter_w))
+    inter_ag = [
+        step(1 << i, rev_inter[i], False, True) for i in range(lo)
+    ]
+    rev_intra = list(reversed(intra_w))
+    intra_ag = [
+        step(1 << i, rev_intra[i], False, False) for i in range(li)
+    ]
+    drop_empty = lambda steps: [st for st in steps if st.pairs]
+    return (
+        drop_empty(intra_rs),
+        drop_empty(inter_rs),
+        drop_empty(inter_ag),
+        drop_empty(intra_ag),
+    )
+
+
 @functools.lru_cache(maxsize=None)
-def build_mla_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
+def build_mla_schedule(
+    n_nodes: int, ppn: int, elems: int | None = None
+) -> P2PSchedule:
     """Multi-lane node-aware (MLA) allreduce message schedule.
 
     The bandwidth-regime mirror of NAP: instead of each chip carrying the
@@ -467,63 +688,81 @@ def build_mla_schedule(n_nodes: int, ppn: int) -> P2PSchedule:
     executed ``mla_allreduce`` lowers to, so the simulator's replay, the
     closed-form model and the real path agree on both the latency-step
     count and the byte totals.  (A ring realization would charge ``k-1``
-    alpha-steps and materialize O(k^2) pairs, which is neither.)  For
-    non-power counts the step fractions are rescaled so per-chip bytes
-    stay exactly ``(k-1)/k`` of the phase payload.
+    alpha-steps and materialize O(k^2) pairs, which is neither.)
+
+    ``elems=None`` keeps the even-fraction accounting (per-chip bytes
+    exactly ``(k-1)/k`` of each phase payload).  Passing the payload's
+    element count instead builds the *ragged-stripe* schedule: per-pair
+    fractions follow :func:`mla_stripe_geometry`'s uneven blocks, so
+    ``max_internode_bytes_per_chip`` equals the uneven-block lower bound
+    (:func:`mla_internode_lower_bound`) — no zero-padded bytes ever cross
+    the slow domain, unlike pad-to-power striping.
 
     Message sizes are carried as payload *fractions* (of the full ``s``)
-    in ``P2PStep.frac`` so the event-driven simulator can replay the
-    striped schedule exactly.
+    in ``P2PStep.frac``/``fracs`` so the event-driven simulator can replay
+    the striped schedule exactly.
     """
     if n_nodes < 1 or ppn < 1:
         raise ValueError("n_nodes and ppn must be positive")
+    phases = _mla_phase_steps(n_nodes, ppn, elems, 1.0, 0)
+    steps = [st for phase in phases for st in phase]
+    return P2PSchedule(n_nodes, ppn, tuple(steps), kind="mla")
 
-    def halving_fracs(k: int, scale: float) -> list[float]:
-        """Per-step payload fractions of a k-way recursive-halving RS."""
-        if k <= 1:
-            return []
-        n_steps = math.ceil(math.log2(k))
-        raw = [2.0 ** -(i + 1) for i in range(n_steps)]
-        return [f * ((k - 1) / k) / sum(raw) * scale for f in raw]
 
-    def intra_pairs(bit: int) -> tuple[tuple[int, int], ...]:
-        return tuple(
-            (node * ppn + r, node * ppn + (r ^ bit))
-            for node in range(n_nodes)
-            for r in range(ppn)
-            if (r ^ bit) < ppn
-        )
+@functools.lru_cache(maxsize=None)
+def build_mla_pipelined_schedule(
+    n_nodes: int, ppn: int, chunks: int, elems: int | None = None
+) -> P2PSchedule:
+    """Chunked, pipelined MLA schedule (doubly-pipelined reduction-to-all).
 
-    def inter_pairs(bit: int) -> tuple[tuple[int, int], ...]:
-        return tuple(
-            (node * ppn + r, (node ^ bit) * ppn + r)
-            for node in range(n_nodes)
-            for r in range(ppn)
-            if (node ^ bit) < n_nodes
-        )
+    The payload is split into ``chunks`` ragged chunks; each chunk runs
+    the four MLA phases, and chunk ``c``'s inter-pod phases overlap chunk
+    ``c+1``'s intra-pod phases because they occupy *different* network
+    domains (ICI vs DCI) — the chunk-level overlap of Träff's
+    doubly-pipelined allreduce (arXiv:2109.12626) applied to the
+    multi-lane engine.
 
-    intra_fracs = halving_fracs(ppn, 1.0)
-    inter_fracs = halving_fracs(n_nodes, 1.0 / ppn)  # per-lane stripes
-    li, lo = len(intra_fracs), len(inter_fracs)
+    Steps are emitted in wavefront order (chunk ``c`` phase ``p`` before
+    chunk ``c+1`` phase ``p``), each tagged with its ``chunk`` and chained
+    to its same-chunk predecessor through ``dep``; cross-chunk order is
+    constrained only by per-chip, per-domain port availability, which is
+    how the simulator's replay exhibits the overlap win.  Total bytes are
+    identical to the unpipelined schedule — pipelining trades extra alpha
+    steps (``chunks`` x the latency) for intra/inter overlap, which is why
+    the dispatcher only selects it when the §IV model says the payload
+    amortises the latency.
+    """
+    if chunks < 1:
+        raise ValueError("chunks must be positive")
+    if elems is not None:
+        chunk_elems = ragged_splits(elems, chunks)
+        scales = [ce / float(max(elems, 1)) for ce in chunk_elems]
+        per_chunk = [
+            _mla_phase_steps(n_nodes, ppn, ce, sc, c) if ce else ([], [], [], [])
+            for c, (ce, sc) in enumerate(zip(chunk_elems, scales))
+        ]
+    else:
+        per_chunk = [
+            _mla_phase_steps(n_nodes, ppn, None, 1.0 / chunks, c)
+            for c in range(chunks)
+        ]
 
     steps: list[P2PStep] = []
-    # stripe the pod partial: halving RS, farthest partner first
-    for i, f in enumerate(intra_fracs):
-        steps.append(
-            P2PStep(intra_pairs(1 << (li - 1 - i)), combine=True, frac=f)
-        )
-    # per-lane RS across the slow domain
-    for i, f in enumerate(inter_fracs):
-        steps.append(
-            P2PStep(inter_pairs(1 << (lo - 1 - i)), combine=True, frac=f)
-        )
-    # per-lane AG: doubling, smallest chunk first
-    for i, f in enumerate(reversed(inter_fracs)):
-        steps.append(P2PStep(inter_pairs(1 << i), combine=False, frac=f))
-    # rebuild the full payload inside the pod
-    for i, f in enumerate(reversed(intra_fracs)):
-        steps.append(P2PStep(intra_pairs(1 << i), combine=False, frac=f))
-    return P2PSchedule(n_nodes, ppn, tuple(steps), kind="mla")
+    last_idx = [-1] * chunks  # index of each chunk's last emitted step
+    n_phases = 4
+    for wave in range(chunks + n_phases - 1):
+        for c in range(chunks):
+            ph = wave - c
+            if not 0 <= ph < n_phases:
+                continue
+            for st in per_chunk[c][ph]:
+                steps.append(
+                    dataclass_replace(st, dep=last_idx[c])
+                )
+                last_idx[c] = len(steps) - 1
+    return P2PSchedule(
+        n_nodes, ppn, tuple(steps), kind="mla_pipelined", chunks=chunks
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -621,6 +860,67 @@ def simulate_allreduce(
             contrib[chip] = fold(contrib[chip], snapshot[chip])
         v = local_allreduce(contrib)
     return v
+
+
+def simulate_mla_allreduce(
+    n_nodes: int,
+    ppn: int,
+    values: np.ndarray,
+    op: str = "sum",
+    chunks: int = 1,
+) -> np.ndarray:
+    """Execute the ragged (optionally chunked) MLA algorithm on host.
+
+    Walks the exact uneven-block geometry the schedule builders and the
+    ``collectives.mla_allreduce`` lowering share — chunk split, per-lane
+    stripes, per-node sub-blocks — reducing each sub-block only along the
+    path the real algorithm uses.  The test oracle: the result must equal
+    the op-reduction of ``values`` along axis 0 on every chip, proving
+    the ragged offsets partition the payload exactly (no element dropped,
+    none double-counted, no padding needed).
+    """
+    fold, _ = _OPS[op]
+    n_chips = n_nodes * ppn
+    v = np.asarray(values, dtype=np.float64)
+    if v.ndim != 2 or v.shape[0] != n_chips:
+        raise ValueError("values must have shape (n_chips, elems)")
+    elems = v.shape[1]
+    result = np.empty(elems, dtype=np.float64)
+    c_off = 0
+    for ce in ragged_splits(elems, chunks):
+        if ce == 0:
+            continue
+        sub = v[:, c_off : c_off + ce]
+        stripes, blocks = mla_stripe_geometry(n_nodes, ppn, ce)
+        s_off = 0
+        for r, sr in enumerate(stripes):
+            if sr == 0:
+                continue
+            stripe_vals = sub[:, s_off : s_off + sr]
+            # phase 1 (intra RS): lane-r chip of node j holds node j's
+            # partial of stripe r
+            node_part = np.empty((n_nodes, sr))
+            for j in range(n_nodes):
+                acc = stripe_vals[j * ppn]
+                for row in stripe_vals[j * ppn + 1 : (j + 1) * ppn]:
+                    acc = fold(acc, row)
+                node_part[j] = acc
+            # phase 2 (per-lane inter RS): node j reduces its sub-block
+            b_off = 0
+            reduced = np.empty(sr)
+            for j, bj in enumerate(blocks[r]):
+                if bj == 0:
+                    continue
+                blk = node_part[0, b_off : b_off + bj]
+                for row in node_part[1:, b_off : b_off + bj]:
+                    blk = fold(blk, row)
+                reduced[b_off : b_off + bj] = blk
+                b_off += bj
+            # phases 2b/3 (inter AG + intra AG): everyone gets the stripe
+            result[c_off + s_off : c_off + s_off + sr] = reduced
+            s_off += sr
+        c_off += ce
+    return np.broadcast_to(result, v.shape).copy()
 
 
 def message_counts(schedule: NapSchedule) -> dict[str, int]:

@@ -36,6 +36,8 @@ __all__ = [
     "cost_smp",
     "cost_nap",
     "cost_mla",
+    "cost_mla_pipelined",
+    "optimal_pipeline_chunks",
     "crossover_bytes",
 ]
 
@@ -142,23 +144,96 @@ def cost_mla(s: float, n: int, ppn: int, p: MachineParams) -> float:
     lanes run reduce-scatter + allgather concurrently, so each chip crosses
     the slow domain with ``2*(s/ppn)*(n-1)/n`` bytes at the per-chip rate
     ``min(R_b, R_N/ppn)`` (all lanes inject at once) over ``2*log2(n)``
-    latency steps.
+    latency steps.  The serialized sum of the shared stage times — the
+    one-chunk special case of :func:`cost_mla_pipelined`.
+    """
+    t_rs, t_inter, t_ag = _mla_stage_times(s, n, ppn, p)
+    comp = p.gamma * s * 2.0  # local stripe reduce + per-lane RS folds
+    return t_rs + t_inter + t_ag + comp
+
+
+def _mla_stage_times(
+    s_c: float, n: int, ppn: int, p: MachineParams
+) -> tuple[float, float, float]:
+    """(intra-RS, inter RS+AG, intra-AG) times for one ``s_c``-byte chunk.
+
+    The single source of the MLA stage formulas: :func:`cost_mla` sums
+    them serially and :func:`cost_mla_pipelined` pipelines them, so the
+    two models cannot drift apart.
     """
     lanes = max(1, ppn)
-    intra_steps = 2 * math.ceil(_log2(ppn)) if ppn > 1 else 0
-    intra = intra_steps * p.alpha_l + 2.0 * p.beta_l * s * (lanes - 1) / lanes
+    li = math.ceil(_log2(ppn)) if ppn > 1 else 0
+    t_intra = li * p.alpha_l + p.beta_l * s_c * (lanes - 1) / lanes
     if n > 1:
-        inter_steps = 2 * math.ceil(_log2(n))
-        lane_bytes = 2.0 * (s / lanes) * (n - 1) / n
+        lo = math.ceil(_log2(n))
+        lane_bytes = 2.0 * (s_c / lanes) * (n - 1) / n
         rate = min(p.R_b, p.R_N / lanes)
-        inter = inter_steps * p.alpha + lane_bytes / rate
+        t_inter = 2 * lo * p.alpha + lane_bytes / rate
     else:
-        inter = 0.0
-    comp = p.gamma * s * 2.0  # local stripe reduce + per-lane RS folds
-    return intra + inter + comp
+        t_inter = 0.0
+    return t_intra, t_inter, t_intra
 
 
-_LARGE_COSTS = {"smp": cost_smp, "rd": cost_rd, "mla": cost_mla}
+def cost_mla_pipelined(
+    s: float, n: int, ppn: int, p: MachineParams, chunks: int | None = None
+) -> float:
+    """Chunked, pipelined MLA cost under the max-rate model.
+
+    The payload is split into ``chunks`` pieces; chunk ``c``'s inter-pod
+    reduce-scatter/allgather overlaps chunk ``c±1``'s intra-pod phases
+    (distinct networks: ICI vs DCI).  The makespan is the classic pipeline
+    bound — whichever network domain is the bottleneck processes all
+    ``chunks`` of its stages back to back, plus the fill/drain cost of the
+    other domain's first and last chunk:
+
+        T = max(C*t_inter + t_rs + t_ag,  C*(t_rs + t_ag) + t_inter) + comp
+
+    ``chunks=1`` degenerates exactly to :func:`cost_mla`.  ``chunks=None``
+    picks the model-optimal depth (:func:`optimal_pipeline_chunks`) — the
+    bandwidth term is unchanged by chunking while the alpha term grows
+    linearly in ``C``, so the optimum balances overlap savings against
+    the ``C * 2*log2(n) * alpha`` latency bill.
+    """
+    if chunks is None:
+        chunks = optimal_pipeline_chunks(s, n, ppn, p)
+    c = max(1, int(chunks))
+    t_rs, t_inter, t_ag = _mla_stage_times(s / c, n, ppn, p)
+    span = max(c * t_inter + t_rs + t_ag, c * (t_rs + t_ag) + t_inter)
+    return span + p.gamma * s * 2.0
+
+
+def optimal_pipeline_chunks(
+    s: float, n: int, ppn: int, p: MachineParams, max_chunks: int = 16
+) -> int:
+    """Model-optimal MLA pipeline depth (1 = don't pipeline).
+
+    Evaluates the closed form over ``1..max_chunks`` — cheap enough to be
+    exact rather than using the sqrt rule of thumb, and naturally returns
+    1 whenever the alpha bill outweighs the overlap (small payloads,
+    latency-dominated machines).
+    """
+    if n <= 1 or ppn <= 1:
+        return 1  # no second domain to overlap with
+    best_c, best_t = 1, None
+    for c in range(1, max(1, max_chunks) + 1):
+        t = cost_mla_pipelined(s, n, ppn, p, chunks=c)
+        if best_t is None or t < best_t:
+            best_c, best_t = c, t
+    return best_c
+
+
+def _cost_mla_pipelined_opt(
+    s: float, n: int, ppn: int, p: MachineParams
+) -> float:
+    return cost_mla_pipelined(s, n, ppn, p, chunks=None)
+
+
+_LARGE_COSTS = {
+    "smp": cost_smp,
+    "rd": cost_rd,
+    "mla": cost_mla,
+    "mla_pipelined": _cost_mla_pipelined_opt,
+}
 
 
 def crossover_bytes(

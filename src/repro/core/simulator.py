@@ -12,6 +12,14 @@ This is strictly more faithful than evaluating the closed forms (Eq 4-6):
 ragged node counts, donor rounds, the SMP master bottleneck and the fold
 steps of non-power recursive doubling all shape the simulated time.
 
+Chunked (pipelined MLA) schedules are replayed with *per-domain ports*:
+each chip owns independent intra-pod (ICI) and inter-pod (DCI) ports, a
+chunk's phases serialize through their ``dep``/data-readiness chain, and
+different chunks contend only for ports — so chunk ``c+1``'s intra
+phases genuinely overlap chunk ``c``'s inter phases and the overlap win
+appears as reduced clock skew, not as an assumed formula.  Ragged
+stripes replay with their exact per-pair (uneven-block) message sizes.
+
 Vectorised with NumPy: each step processes all messages at once (each chip
 receives at most one message per round by schedule construction).
 """
@@ -54,23 +62,26 @@ def _local_allreduce_time(
     return t.reshape(-1)
 
 
-def _message_step_time(
-    t: np.ndarray,
+def _pair_costs(
     pairs: np.ndarray,
     ppn: int,
-    s: float,
+    s,
     p: MachineParams,
     combine: bool,
-) -> np.ndarray:
-    """Advance clocks through one round of point-to-point messages."""
-    if pairs.size == 0:
-        return t
+    n_nodes: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(inter-mask, per-message cost) for one round of messages.
+
+    ``s`` may be a scalar (every message the same size) or a per-pair
+    byte array (ragged stripes).  The injection penalty counts the
+    concurrent inter-node senders per node *within this round*.
+    """
     src, dst = pairs[:, 0], pairs[:, 1]
     inter = (src // ppn) != (dst // ppn)
-    # per-node concurrent inter-node senders -> max-rate injection penalty
+    s = np.broadcast_to(np.asarray(s, dtype=np.float64), src.shape)
     senders = src[inter] // ppn
     if senders.size:
-        counts = np.bincount(senders, minlength=int(t.size // ppn))
+        counts = np.bincount(senders, minlength=n_nodes)
         k = counts[src // ppn]
     else:
         k = np.zeros_like(src)
@@ -82,11 +93,89 @@ def _message_step_time(
     )
     if combine:
         cost = cost + p.gamma * s
+    return inter, cost
+
+
+def _message_step_time(
+    t: np.ndarray,
+    pairs: np.ndarray,
+    ppn: int,
+    s,
+    p: MachineParams,
+    combine: bool,
+) -> np.ndarray:
+    """Advance clocks through one round of point-to-point messages."""
+    if pairs.size == 0:
+        return t
+    src, dst = pairs[:, 0], pairs[:, 1]
+    inter, cost = _pair_costs(
+        pairs, ppn, s, p, combine, int(t.size // ppn)
+    )
     t_new = t.copy()
     np.maximum.at(t_new, dst, np.maximum(t[src], t[dst]) + cost)
     # senders are busy until their message is injected (latency portion)
     np.maximum.at(t_new, src, t[src] + np.where(inter, p.alpha, p.alpha_l))
     return t_new
+
+
+def _simulate_chunked(schedule, s: float, p: MachineParams) -> float:
+    """Replay a chunked (pipelined MLA) schedule with per-domain ports.
+
+    Each chip owns two independent network ports — intra-pod (ICI) and
+    inter-pod (DCI).  A step's start time on a pair is the max of (a) the
+    endpoints' *data* readiness within the step's chunk (the ``dep``
+    chain: phases of one chunk serialize) and (b) the endpoints' port
+    availability in the step's domain (steps of *different* chunks
+    contend only for ports).  Chunk ``c+1``'s intra phases therefore
+    overlap chunk ``c``'s inter phases — the pipelined win — while two
+    inter phases can never overlap on one chip, so the DCI is never
+    oversubscribed.  Per-chip clock skew (ragged stripes, non-power
+    grids) emerges naturally, exactly as in the unchunked replay.
+    """
+    n, ppn = schedule.n_nodes, schedule.ppn
+    n_chips = n * ppn
+    zeros = np.zeros(n_chips)
+    # cumulative per-chip data-readiness *after* each step; a step's
+    # baseline readiness comes from its declared ``dep`` predecessor
+    ready_after: dict[int, np.ndarray] = {}
+    avail = {
+        False: np.zeros(n_chips),  # intra (ICI) port free time
+        True: np.zeros(n_chips),  # inter (DCI) port free time
+    }
+    for idx, step in enumerate(schedule.steps):
+        rc = ready_after[step.dep] if step.dep >= 0 else zeros
+        pairs = np.asarray(step.pairs, dtype=np.int64).reshape(-1, 2)
+        if pairs.size == 0:
+            ready_after[idx] = rc
+            continue
+        src, dst = pairs[:, 0], pairs[:, 1]
+        msg_bytes = np.asarray(step.pair_fracs(), dtype=np.float64) * s
+        inter, cost = _pair_costs(
+            pairs, ppn, msg_bytes, p, step.combine, n
+        )
+        av_src = np.where(inter, avail[True][src], avail[False][src])
+        av_dst = np.where(inter, avail[True][dst], avail[False][dst])
+        start = np.maximum(
+            np.maximum(rc[src], rc[dst]), np.maximum(av_src, av_dst)
+        )
+        finish = start + cost
+        alpha_dom = np.where(inter, p.alpha, p.alpha_l)
+        # data readiness: receivers wait for the payload, senders are busy
+        # only through injection
+        rc_new = rc.copy()
+        np.maximum.at(rc_new, dst, finish)
+        np.maximum.at(rc_new, src, start + alpha_dom)
+        ready_after[idx] = rc_new
+        # port occupancy per domain
+        for dom in (False, True):
+            m = inter == dom
+            if not m.any():
+                continue
+            np.maximum.at(avail[dom], dst[m], finish[m])
+            np.maximum.at(avail[dom], src[m], start[m] + alpha_dom[m])
+    if not ready_after:
+        return 0.0
+    return float(max(r.max() for r in ready_after.values()))
 
 
 def simulate_time(
@@ -105,15 +194,23 @@ def simulate_time(
                 )
             t = _local_allreduce_time(t, n, ppn, s, p)
         return float(t.max())
+    if getattr(schedule, "kind", "") == "mla_pipelined":
+        # chunked schedules: per-domain ports let chunks overlap
+        return _simulate_chunked(schedule, s, p)
     # P2P schedules (RD / SMP / MLA).  Striped schedules carry a payload
-    # fraction per step, so the striped MLA path is replayed with the real
-    # s/ppn (intra) and s/(n*ppn) (inter-lane) message sizes.
+    # fraction per step (per-pair for ragged stripes), so the striped MLA
+    # path is replayed with the real uneven message sizes.
     for step in schedule.steps:
+        fracs = (
+            np.asarray(step.fracs, dtype=np.float64)
+            if getattr(step, "fracs", None) is not None
+            else getattr(step, "frac", 1.0)
+        )
         t = _message_step_time(
             t,
             np.asarray(step.pairs, dtype=np.int64).reshape(-1, 2),
             ppn,
-            s * getattr(step, "frac", 1.0),
+            s * fracs,
             p,
             combine=step.combine,
         )
@@ -128,18 +225,59 @@ _BUILDERS = {
 }
 
 
+def _build(algo, n_nodes, ppn, s, p, chunks=None, elems=None):
+    if algo == "mla_pipelined":
+        if chunks is None:
+            from . import perf_model as pm
+
+            chunks = pm.optimal_pipeline_chunks(s, n_nodes, ppn, p)
+        return napalg.build_mla_pipelined_schedule(
+            n_nodes, ppn, chunks, elems
+        )
+    if algo == "mla" and elems is not None:
+        return napalg.build_mla_schedule(n_nodes, ppn, elems)
+    return _BUILDERS[algo](n_nodes, ppn)
+
+
 def simulate_algorithm(
-    algo: str, n_nodes: int, ppn: int, s: float, p: MachineParams
+    algo: str,
+    n_nodes: int,
+    ppn: int,
+    s: float,
+    p: MachineParams,
+    *,
+    chunks: int | None = None,
+    elems: int | None = None,
 ) -> float:
+    """Simulated wall-time of one ``s``-byte allreduce.
+
+    ``algo="mla_pipelined"`` replays the chunked schedule; ``chunks=None``
+    takes the model-optimal depth (so the dispatcher's decision and the
+    replay agree).  ``elems`` switches MLA flavours to exact ragged-stripe
+    message sizes instead of the even ideal.
+    """
     # the schedule builders are lru_cached, so no cache layer needed here
-    return simulate_time(_BUILDERS[algo](n_nodes, ppn), s, p)
+    return simulate_time(_build(algo, n_nodes, ppn, s, p, chunks, elems), s, p)
 
 
-def internode_bytes_per_chip(algo: str, n_nodes: int, ppn: int, s: float) -> float:
+def internode_bytes_per_chip(
+    algo: str,
+    n_nodes: int,
+    ppn: int,
+    s: float,
+    *,
+    chunks: int | None = None,
+    elems: int | None = None,
+) -> float:
     """Max inter-node bytes any chip sends for an ``s``-byte reduction.
 
     The quantity the MLA stripe divides by ppn: replaying the schedules
     shows ``~2s`` for node-agnostic RS+AG lowerings, ``steps*s`` for NAP,
-    and ``~2*(s/ppn)*(n-1)/n`` for MLA.
+    and ``~2*(s/ppn)*(n-1)/n`` for MLA.  With ``elems`` the MLA flavours
+    account ragged stripes exactly (the uneven-block lower bound — no
+    padded bytes cross the slow domain).
     """
-    return _BUILDERS[algo](n_nodes, ppn).max_internode_bytes_per_chip(s)
+    from .perf_model import TPU_V5E_POD
+
+    sched = _build(algo, n_nodes, ppn, s, TPU_V5E_POD, chunks, elems)
+    return sched.max_internode_bytes_per_chip(s)

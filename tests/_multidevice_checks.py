@@ -331,6 +331,162 @@ def check_multiaxis_hierarchy():
     )
 
 
+def check_op_dtype_matrix():
+    """Acceptance sweep: op x dtype x grid through ``algorithm="auto"``.
+
+    sum/max/min x f32/bf16/int32 on square, ragged (5x3) and ppn==1
+    grids, under both the modeled crossover and a tiny fixed threshold
+    (which forces every payload onto the bandwidth-regime engines — the
+    regression surface: MLA used to raise for max/min, promote integer
+    payloads, and NAP used to crash on ppn==1 fixed-threshold grids).
+    Values are all-negative for max and all-positive for min so a wrong
+    (zero) pad identity is caught, not masked.
+    """
+    rng = np.random.default_rng(23)
+    ops = ["sum", "max", "min"]
+    dtypes = [jnp.float32, jnp.bfloat16, jnp.int32]
+    elems = 40  # ragged vs every tested ppn and node count
+    for shape, gname in [((4, 4), "g4x4"), ((5, 3), "g5x3"), ((6, 1), "g6x1")]:
+        n, ppn = shape
+        chips = n * ppn
+        mesh = make_mesh(shape, ("pod", "data"))
+        inputs, refs = {}, {}
+        for op in ops:
+            for dt in dtypes:
+                key = f"{op}_{jnp.dtype(dt).name}"
+                if jnp.issubdtype(dt, jnp.integer):
+                    base = rng.integers(5, 90, size=(chips, elems))
+                    vals = -base if op == "max" else base
+                    arr = jnp.asarray(vals.astype(np.int32))
+                else:
+                    base = np.abs(rng.normal(size=(chips, elems))) + 0.5
+                    vals = -base if op == "max" else base
+                    arr = jnp.asarray(vals.astype(np.float32)).astype(dt)
+                inputs[key] = arr
+                ref_vals = np.asarray(arr.astype(jnp.float32))
+                refs[key] = {"sum": np.sum, "max": np.max, "min": np.min}[
+                    op
+                ](ref_vals, axis=0)
+        for mode, kw in [
+            ("fixed", {"small_threshold_bytes": 64}),
+            ("auto", {}),
+        ]:
+
+            def local(tree, kw=kw):
+                return {
+                    k: collectives.hierarchical_allreduce(
+                        v,
+                        inter_axes="pod",
+                        intra_axes="data",
+                        algorithm="auto",
+                        op=k.split("_")[0],
+                        **kw,
+                    )
+                    for k, v in tree.items()
+                }
+
+            spec = {k: P(("pod", "data")) for k in inputs}
+            fn = jax.jit(
+                compat.shard_map(
+                    local, mesh=mesh, in_specs=(spec,), out_specs=spec
+                )
+            )
+            out = fn(inputs)
+            ok, bad = True, []
+            for k, v in out.items():
+                got = np.asarray(v.astype(jnp.float32))
+                want = np.tile(refs[k], (chips, 1))
+                tol = 5e-2 if "bfloat16" in k else 1e-5
+                k_ok = (
+                    np.allclose(got, want, rtol=tol, atol=tol)
+                    and v.dtype == inputs[k].dtype
+                )
+                ok &= k_ok
+                if not k_ok:
+                    bad.append(k)
+            record(f"op_dtype_matrix_{gname}_{mode}", ok, failed=bad)
+
+
+def check_mla_pipelined_execution():
+    """The chunked MLA lowering must stay exact: ragged chunk split plus
+    per-chunk ragged stripes, explicit depth and model-driven depth."""
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(29)
+    xs = jnp.asarray(rng.normal(size=(16, 101)).astype(np.float32))
+    want = np.asarray(xs).sum(axis=0)
+    ok = True
+    for algo, kw in [
+        ("mla", {"pipeline_chunks": 3}),
+        ("mla_pipelined", {}),  # model-driven depth
+    ]:
+        fn = jax.jit(
+            compat.shard_map(
+                partial(
+                    collectives.ALGORITHMS[algo],
+                    inter_axes="pod",
+                    intra_axes="data",
+                    **kw,
+                ),
+                mesh=mesh,
+                in_specs=P(("pod", "data")),
+                out_specs=P(("pod", "data")),
+            )
+        )
+        got = np.asarray(fn(xs))
+        ok &= np.allclose(got, np.tile(want, (16, 1)), rtol=1e-5, atol=1e-5)
+    # max through an explicitly pipelined path (all-negative payload)
+    neg = jnp.asarray((-np.abs(rng.normal(size=(16, 53))) - 1).astype(np.float32))
+    fn = jax.jit(
+        compat.shard_map(
+            partial(
+                collectives.mla_allreduce,
+                inter_axes="pod",
+                intra_axes="data",
+                op="max",
+                pipeline_chunks=2,
+            ),
+            mesh=mesh,
+            in_specs=P(("pod", "data")),
+            out_specs=P(("pod", "data")),
+        )
+    )
+    got = np.asarray(fn(neg))
+    ok &= np.allclose(
+        got, np.tile(np.asarray(neg).max(axis=0), (16, 1)), rtol=1e-5
+    )
+    record("mla_pipelined_execution", ok)
+
+
+def check_fixed_threshold_ppn1():
+    """Regression: fixed ``small_threshold_bytes`` with ppn == 1 used to
+    dispatch NAP, which raises ValueError at trace time; it must fall
+    back to RS+AG like the modeled branch, for sizes on both sides of
+    the threshold."""
+    mesh = make_mesh((6, 1), ("pod", "data"))
+    rng = np.random.default_rng(31)
+    ok = True
+    for size in [3, 1024]:  # below and above the 64-byte threshold
+        xs = jnp.asarray(rng.normal(size=(6, size)).astype(np.float32))
+        fn = jax.jit(
+            compat.shard_map(
+                partial(
+                    collectives.hierarchical_allreduce,
+                    inter_axes="pod",
+                    intra_axes="data",
+                    algorithm="auto",
+                    small_threshold_bytes=64,
+                ),
+                mesh=mesh,
+                in_specs=P(("pod", "data")),
+                out_specs=P(("pod", "data")),
+            )
+        )
+        got = np.asarray(fn(xs))
+        want = np.asarray(xs).sum(axis=0)
+        ok &= np.allclose(got, np.tile(want, (6, 1)), rtol=1e-5, atol=1e-5)
+    record("fixed_threshold_ppn1", ok)
+
+
 def check_grad_sync():
     from repro.core import grad_sync
 
@@ -459,6 +615,39 @@ def check_grad_sync_mla():
     record("grad_sync_mla_mean", ok)
 
 
+def check_grad_sync_pipelined():
+    """Large buckets through the pipelined MLA path (explicit depth and
+    model-driven) must still produce the exact mean."""
+    from repro.core import grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(37)
+    grads = {
+        "big": jnp.asarray(rng.normal(size=(16, 3001)).astype(np.float32)),
+        "tiny": jnp.asarray(rng.normal(size=(16, 2)).astype(np.float32)),
+    }
+    specs = {k: P(("pod", "data")) for k in grads}
+    ok = True
+    for cfg in [
+        grad_sync.GradSyncConfig(
+            algorithm="auto", mean=True, pipeline_chunks=2,
+            small_threshold_bytes=256,
+        ),
+        grad_sync.GradSyncConfig(algorithm="mla_pipelined", mean=True),
+    ]:
+        sync = grad_sync.make_grad_sync(
+            cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+        )
+        out = jax.jit(sync)(grads)
+        for k in grads:
+            want = np.asarray(grads[k]).mean(axis=0)
+            ok &= np.allclose(
+                np.asarray(out[k]), np.tile(want, (16, 1)),
+                rtol=1e-5, atol=1e-5,
+            )
+    record("grad_sync_pipelined", ok)
+
+
 def check_dp_training_nap_equals_psum():
     """End-to-end: a few training steps with NAP gradient sync must match
     the psum baseline bit-for-bit-ish (same reduction, different schedule)
@@ -580,9 +769,13 @@ def main():
     check_internode_message_reduction()
     check_nonpower_mesh()
     check_multiaxis_hierarchy()
+    check_op_dtype_matrix()
+    check_mla_pipelined_execution()
+    check_fixed_threshold_ppn1()
     check_grad_sync()
     check_grad_sync_dtypes()
     check_grad_sync_mla()
+    check_grad_sync_pipelined()
     check_dp_training_nap_equals_psum()
     check_nap_extensions()
     print("RESULTS_JSON:" + json.dumps(RESULTS))

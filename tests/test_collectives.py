@@ -59,11 +59,20 @@ _EXPECTED = [
     "hlo_permute_counts",
     "correct_nap_nonpower_8x2",
     "correct_nap_multiaxis",
+    "op_dtype_matrix_g4x4_fixed",
+    "op_dtype_matrix_g4x4_auto",
+    "op_dtype_matrix_g5x3_fixed",
+    "op_dtype_matrix_g5x3_auto",
+    "op_dtype_matrix_g6x1_fixed",
+    "op_dtype_matrix_g6x1_auto",
+    "mla_pipelined_execution",
+    "fixed_threshold_ppn1",
     "grad_sync_nap_mean",
     "grad_sync_compressed",
     "grad_sync_dtype_semantics",
     "grad_sync_compressed_dtypes",
     "grad_sync_mla_mean",
+    "grad_sync_pipelined",
     "dp_train_nap_equals_psum",
     "nap_allgather",
     "nap_reduce_scatter",

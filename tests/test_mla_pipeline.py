@@ -1,0 +1,303 @@
+"""Ragged-stripe + pipelined MLA: geometry, accounting, model, replay.
+
+Covers the tentpole of the pipelined MLA engine at the host level (no
+jax): the uneven-block stripe geometry and its NumPy oracle, the
+zero-padded-bytes accounting claim, the chunked schedule's structure and
+dependencies, the pipelined cost model, the simulator's overlap win, and
+the op-safe three-contender dispatch decision.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import napalg, perf_model as pm, simulator as sim
+
+TPU = pm.TPU_V5E_POD
+
+
+# ---------------------------------------------------------------------------
+# ragged split geometry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("total", [0, 1, 4, 37, 101, 1 << 14])
+@pytest.mark.parametrize("k", [1, 2, 3, 5, 16])
+def test_ragged_splits_partition(total, k):
+    parts = napalg.ragged_splits(total, k)
+    assert len(parts) == k
+    assert sum(parts) == total
+    assert max(parts) - min(parts) <= 1
+    assert list(parts) == sorted(parts, reverse=True)  # larger first
+
+
+@pytest.mark.parametrize("n_nodes,ppn,elems", [(5, 3, 37), (3, 5, 41), (14, 4, 999)])
+def test_stripe_geometry_partitions_exactly(n_nodes, ppn, elems):
+    stripes, blocks = napalg.mla_stripe_geometry(n_nodes, ppn, elems)
+    assert sum(stripes) == elems
+    for sr, bl in zip(stripes, blocks):
+        assert sum(bl) == sr
+        assert len(bl) == n_nodes
+
+
+# ---------------------------------------------------------------------------
+# NumPy oracle: ragged (and chunked) MLA stripes reduce exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+@pytest.mark.parametrize(
+    "n_nodes,ppn",
+    [(1, 4), (3, 1), (3, 3), (5, 3), (6, 1), (6, 4), (4, 4), (14, 4)],
+)
+@pytest.mark.parametrize("elems", [1, 5, 37, 101])
+def test_mla_oracle_matches_reduction(n_nodes, ppn, elems, op):
+    rng = np.random.default_rng(n_nodes * 1000 + ppn * 10 + elems)
+    values = rng.normal(size=(n_nodes * ppn, elems))
+    for chunks in [1, 2, 3]:
+        got = napalg.simulate_mla_allreduce(
+            n_nodes, ppn, values, op=op, chunks=chunks
+        )
+        ref = {"sum": np.sum, "max": np.max, "min": np.min}[op](
+            values, axis=0
+        )
+        np.testing.assert_allclose(
+            got, np.broadcast_to(ref, values.shape), rtol=1e-12, atol=1e-12
+        )
+
+
+# ---------------------------------------------------------------------------
+# the tentpole byte claim: zero padded bytes cross the slow domain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n_nodes,ppn,elems",
+    [(5, 3, 37), (3, 5, 41), (6, 4, 101), (14, 4, 1000), (3, 3, 7), (7, 2, 13)],
+)
+def test_ragged_accounting_equals_uneven_lower_bound(n_nodes, ppn, elems):
+    itemsize = 4.0
+    s = elems * itemsize
+    sched = napalg.build_mla_schedule(n_nodes, ppn, elems)
+    got = sched.max_internode_bytes_per_chip(s)
+    want = napalg.mla_internode_lower_bound(n_nodes, ppn, elems) * itemsize
+    assert got == pytest.approx(want)
+    # strictly below what pad-to-divisible striping would ship: the padded
+    # stripe is ceil(elems/ppn) elements and its padded inter blocks are
+    # ceil(stripe/n) each, all of which cross the slow domain
+    padded_stripe = math.ceil(elems / ppn)
+    padded = 2.0 * math.ceil(padded_stripe / n_nodes) * (n_nodes - 1) * itemsize
+    assert got <= padded + 1e-9
+
+
+def test_ragged_accounting_matches_even_ideal_when_divisible():
+    # divisible payloads: ragged == even == 2*(s/ppn)*(n-1)/n exactly
+    n_nodes, ppn, elems = 4, 4, 1 << 10
+    s = float(elems * 4)
+    ragged = napalg.build_mla_schedule(n_nodes, ppn, elems)
+    even = napalg.build_mla_schedule(n_nodes, ppn)
+    want = 2.0 * (s / ppn) * (n_nodes - 1) / n_nodes
+    assert ragged.max_internode_bytes_per_chip(s) == pytest.approx(want)
+    assert even.max_internode_bytes_per_chip(s) == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# pipelined schedule structure: chunks, deps, byte conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_nodes,ppn", [(4, 4), (16, 16), (5, 3)])
+@pytest.mark.parametrize("chunks", [1, 2, 4])
+def test_pipelined_schedule_structure(n_nodes, ppn, chunks):
+    sched = napalg.build_mla_pipelined_schedule(n_nodes, ppn, chunks)
+    assert sched.kind == "mla_pipelined"
+    assert sched.chunks == chunks
+    seen_chunks = {st.chunk for st in sched.steps}
+    assert seen_chunks == set(range(chunks))
+    # dep chains: each step's dependency is an earlier step of the SAME
+    # chunk (cross-chunk order is left to port contention — the overlap)
+    last = {}
+    for i, st in enumerate(sched.steps):
+        assert st.dep < i
+        assert st.dep == last.get(st.chunk, -1)
+        if st.dep >= 0:
+            assert sched.steps[st.dep].chunk == st.chunk
+        last[st.chunk] = i
+    # per-chunk step count matches the unpipelined schedule
+    base = napalg.build_mla_schedule(n_nodes, ppn)
+    for c in range(chunks):
+        assert sum(1 for st in sched.steps if st.chunk == c) == len(base.steps)
+
+
+@pytest.mark.parametrize("n_nodes,ppn", [(4, 4), (16, 16), (8, 16)])
+def test_pipelining_conserves_bytes(n_nodes, ppn):
+    """Chunking must not change the total inter-node bytes (even split)."""
+    s = float(1 << 20)
+    base = napalg.build_mla_schedule(n_nodes, ppn).max_internode_bytes_per_chip(s)
+    for chunks in [2, 3, 8]:
+        pip = napalg.build_mla_pipelined_schedule(n_nodes, ppn, chunks)
+        assert pip.max_internode_bytes_per_chip(s) == pytest.approx(base)
+
+
+def test_pipelined_ragged_bytes_are_sum_of_chunk_bounds():
+    """Ragged chunking re-derives uneven blocks per chunk; the per-chip
+    total is exactly the sum of the per-chunk uneven-block bounds."""
+    n_nodes, ppn, elems, chunks = 5, 3, 37, 3
+    itemsize = 4.0
+    sched = napalg.build_mla_pipelined_schedule(n_nodes, ppn, chunks, elems)
+    sends = np.zeros(n_nodes * ppn)
+    for ce in napalg.ragged_splits(elems, chunks):
+        stripes, blocks = napalg.mla_stripe_geometry(n_nodes, ppn, ce)
+        for j in range(n_nodes):
+            for r in range(ppn):
+                sends[j * ppn + r] += 2 * (stripes[r] - blocks[r][j])
+    got = sched.max_internode_bytes_per_chip(elems * itemsize)
+    assert got == pytest.approx(sends.max() * itemsize)
+
+
+# ---------------------------------------------------------------------------
+# pipelined cost model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("params", [pm.BLUE_WATERS, pm.TPU_V5E_POD])
+@pytest.mark.parametrize("n_nodes,ppn", [(16, 16), (8, 16), (5, 3)])
+def test_cost_mla_pipelined_chunk1_is_cost_mla(params, n_nodes, ppn):
+    for s in [8.0, float(1 << 20), float(16 << 20)]:
+        assert pm.cost_mla_pipelined(
+            s, n_nodes, ppn, params, chunks=1
+        ) == pytest.approx(pm.cost_mla(s, n_nodes, ppn, params))
+
+
+def test_optimal_chunks_scale_with_payload():
+    """Small payloads must not pipeline (alpha bill); huge ones must."""
+    assert pm.optimal_pipeline_chunks(8.0, 16, 16, TPU) == 1
+    assert pm.optimal_pipeline_chunks(float(1 << 12), 16, 16, TPU) == 1
+    big = pm.optimal_pipeline_chunks(float(64 << 20), 16, 16, TPU)
+    assert big > 1
+    # degenerate grids never pipeline (no second domain to overlap)
+    assert pm.optimal_pipeline_chunks(float(64 << 20), 1, 16, TPU) == 1
+    assert pm.optimal_pipeline_chunks(float(64 << 20), 16, 1, TPU) == 1
+
+
+def test_pipelined_cost_never_worse_than_mla():
+    for n_nodes, ppn in [(16, 16), (64, 16), (4, 4)]:
+        for s in [8.0, float(1 << 20), float(16 << 20), float(256 << 20)]:
+            assert pm.cost_mla_pipelined(s, n_nodes, ppn, TPU) <= (
+                pm.cost_mla(s, n_nodes, ppn, TPU) * (1 + 1e-12)
+            )
+
+
+def test_crossover_three_contenders_ordered():
+    """The pipelined contender can only move the NAP↔large crossover
+    down (it lower-bounds plain MLA), so the three-regime dispatch is
+    consistent: nap below, mla just above, pipelined for huge payloads."""
+    for n_nodes, ppn in [(16, 16), (8, 16)]:
+        xo_mla = pm.crossover_bytes(n_nodes, ppn, TPU, large="mla")
+        xo_pip = pm.crossover_bytes(n_nodes, ppn, TPU, large="mla_pipelined")
+        assert xo_pip <= xo_mla * 1.01
+
+
+# ---------------------------------------------------------------------------
+# simulator: the overlap win (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_simulated_pipelined_never_slower_from_1mib_16x16():
+    """Acceptance: pipelined MLA <= non-pipelined MLA wall-time for
+    payloads >= 1 MiB on a 16x16 grid (model-chosen depth)."""
+    for s in [1 << 20, 2 << 20, 4 << 20, 16 << 20, 64 << 20]:
+        t_mla = sim.simulate_algorithm("mla", 16, 16, float(s), TPU)
+        t_pip = sim.simulate_algorithm("mla_pipelined", 16, 16, float(s), TPU)
+        assert t_pip <= t_mla * (1 + 1e-9), (s, t_pip, t_mla)
+
+
+def test_simulated_overlap_win_is_real():
+    """For payloads past the chunking threshold the replayed clock skew
+    must show a strict win, and deeper-than-model pipelining must not
+    mysteriously beat the model's pick by much (sanity of the model)."""
+    s = float(16 << 20)
+    c_star = pm.optimal_pipeline_chunks(s, 16, 16, TPU)
+    assert c_star > 1
+    t1 = sim.simulate_algorithm("mla_pipelined", 16, 16, s, TPU, chunks=1)
+    t_star = sim.simulate_algorithm(
+        "mla_pipelined", 16, 16, s, TPU, chunks=c_star
+    )
+    assert t_star < t1 * 0.95  # >= 5% simulated overlap win at 16 MiB
+    # model and replay agree on the same order of magnitude
+    t_model = pm.cost_mla_pipelined(s, 16, 16, TPU, chunks=c_star)
+    assert 0.2 < t_star / t_model < 5.0
+
+
+def test_simulated_chunk1_replay_matches_unchunked():
+    """The chunked replayer with C=1 must agree with the plain P2P replay
+    (same costs, data deps serialize identically)."""
+    for s in [8.0, float(1 << 16), float(1 << 22)]:
+        a = sim.simulate_algorithm("mla", 16, 16, s, TPU)
+        b = sim.simulate_algorithm("mla_pipelined", 16, 16, s, TPU, chunks=1)
+        assert b == pytest.approx(a, rel=1e-9)
+
+
+def test_ragged_bytes_via_simulator_api():
+    got = sim.internode_bytes_per_chip("mla", 5, 3, 37 * 4.0, elems=37)
+    want = napalg.mla_internode_lower_bound(5, 3, 37) * 4.0
+    assert got == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# op-safe three-contender dispatch (host-side decision logic)
+# ---------------------------------------------------------------------------
+
+
+def test_select_algorithm_three_contenders():
+    from repro.core import collectives
+
+    n_nodes, ppn = 16, 16
+    xo = collectives.auto_crossover_bytes(n_nodes, ppn)
+    assert collectives.select_algorithm(int(xo) - 8, n_nodes, ppn) == "nap"
+    assert collectives.select_algorithm(int(xo) + 8, n_nodes, ppn) == "mla"
+    assert (
+        collectives.select_algorithm(64 << 20, n_nodes, ppn)
+        == "mla_pipelined"
+    )
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+def test_select_algorithm_op_aware(op):
+    """Every registered op must dispatch to an engine that supports it on
+    every regime — the max/min-above-crossover crash regression."""
+    from repro.core import collectives
+
+    for n_nodes, ppn in [(4, 4), (5, 3), (16, 16)]:
+        for nbytes in [8, 1 << 16, 64 << 20]:
+            algo = collectives.select_algorithm(
+                nbytes, n_nodes, ppn, op=op
+            )
+            assert algo in ("nap", "mla", "mla_pipelined")
+            if algo in ("mla", "mla_pipelined"):
+                assert op in collectives._MLA_OPS
+
+
+def test_select_algorithm_degenerate_grids_both_threshold_modes():
+    """psum for n<=1 and RS+AG (mla) for ppn==1 — identically under the
+    modeled crossover and a fixed threshold (the ppn==1 ValueError
+    regression)."""
+    from repro.core import collectives
+
+    for thresh in [None, 2048]:
+        kw = {"small_threshold_bytes": thresh}
+        assert collectives.select_algorithm(8, 1, 16, **kw) == "psum"
+        assert collectives.select_algorithm(1 << 30, 1, 16, **kw) == "psum"
+        for nbytes in [8, 1 << 20]:
+            algo = collectives.select_algorithm(nbytes, 6, 1, **kw)
+            assert algo in ("mla", "mla_pipelined")  # never NAP: ppn == 1
+    # fixed threshold still honours the NAP/MLA split on healthy grids
+    assert (
+        collectives.select_algorithm(8, 4, 4, small_threshold_bytes=2048)
+        == "nap"
+    )
+    assert (
+        collectives.select_algorithm(4096, 4, 4, small_threshold_bytes=2048)
+        == "mla"
+    )
