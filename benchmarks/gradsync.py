@@ -14,11 +14,33 @@ model-driven "auto" switch (NAP below the per-grid
 ``perf_model.crossover_bytes`` NAP↔MLA crossover, MLA above it,
 pipelined once ``optimal_pipeline_chunks`` says the bucket amortises
 the extra latency steps).
+
+The *bucketed scheduler* section plans a transformer-style gradient
+pytree through :func:`repro.core.bucketing.plan_buckets` and replays the
+plan with the simulator's compute port
+(:func:`repro.core.simulator.simulate_bucketed_sync`): serial sync
+(everything after the last gradient) vs the async executor (buckets
+issued as backward produces them) — the overlap win as wall-clock, plus
+the per-chip inter-node byte table against the uneven-block lower bound.
+
+``--json PATH`` additionally writes the full result set (overlap + byte
+tables) as a JSON artifact — CI uploads it as ``BENCH_3.json`` so the
+perf trajectory is tracked per commit.
 """
 
 from __future__ import annotations
 
-from repro.core import perf_model as pm, simulator as sim
+import json
+import math
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core import bucketing, napalg, perf_model as pm, simulator as sim
 
 P = pm.TPU_V5E_POD
 
@@ -52,8 +74,104 @@ def _bucket_time(algo: str, s: float, n: int, ppn: int) -> float:
     return _COSTS[algo](s, n, ppn, P)
 
 
-def main() -> None:
+def _model_leaf_specs() -> tuple[bucketing.LeafSpec, ...]:
+    """A transformer-ish gradient pytree: big matmul grads interleaved
+    with tiny norm/bias grads, mixed bf16/f32 — ~100M params."""
+    specs = []
+    idx = 0
+
+    def add(elems: int, itemsize: int, dtype: str, fusible: bool = True):
+        nonlocal idx
+        specs.append(
+            bucketing.LeafSpec(
+                index=idx, elems=elems, itemsize=itemsize,
+                dtype=dtype, fusible=fusible,
+            )
+        )
+        idx += 1
+
+    add(32_000 * 1024, 4, "float32")  # embedding
+    for _ in range(12):  # 12 layers
+        add(1024, 4, "float32")  # ln scale
+        add(3 * 1024 * 1024, 2, "bfloat16")  # qkv
+        add(1024 * 1024, 2, "bfloat16")  # proj
+        add(1024, 4, "float32")  # ln scale
+        add(4 * 1024 * 1024, 2, "bfloat16")  # mlp up
+        add(4 * 1024 * 1024, 2, "bfloat16")  # mlp down
+    add(1024, 4, "float32")  # final ln
+    add(1, 4, "int32", fusible=False)  # step counter (int leaf)
+    return tuple(specs)
+
+
+def overlap_section(n_pods: int, ppn: int) -> tuple[list, dict]:
+    """Bucketed-scheduler rows + JSON table for one grid."""
+    plan = bucketing.plan_buckets(_model_leaf_specs(), n_pods, ppn)
+    rows = plan.sim_rows()
+    # compute port: backward produces buckets uniformly over a window the
+    # size of the serial network time (the comm ~= compute regime)
+    t_net = sim.simulate_bucketed_sync(rows, n_pods, ppn, P)
+    k = len(rows)
+    compute_times = [(i + 1) * t_net / k for i in range(k)]
+    t_async = sim.simulate_bucketed_sync(
+        rows, n_pods, ppn, P, compute_times=compute_times, overlap=True
+    )
+    t_serial = sim.simulate_bucketed_sync(
+        rows, n_pods, ppn, P, compute_times=compute_times, overlap=False
+    )
+    buckets_json = []
+    for b in plan.buckets:
+        entry = {
+            "leaves": list(b.leaves),
+            "dtype": b.dtype,
+            "transport_bytes": b.transport_bytes,
+            "algorithm": b.algorithm,
+            "chunks": b.chunks,
+        }
+        if b.algorithm in ("mla", "mla_pipelined") and n_pods > 1:
+            itemsize = b.transport_bytes / max(b.elems, 1)
+            sched = (
+                napalg.build_mla_pipelined_schedule(
+                    n_pods, ppn, b.chunks, b.elems
+                )
+                if b.chunks > 1
+                else napalg.build_mla_schedule(n_pods, ppn, b.elems)
+            )
+            entry["internode_bytes_per_chip"] = sched.max_internode_bytes_per_chip(
+                float(b.transport_bytes)
+            )
+            entry["internode_lower_bound"] = (
+                napalg.mla_internode_lower_bound(n_pods, ppn, b.elems)
+                * itemsize
+            )
+        buckets_json.append(entry)
+    csv_rows = [
+        (f"gradsync_bucketed_num_buckets_pods{n_pods}", plan.num_buckets,
+         f"target={plan.target_bytes:.0f}B"),
+        (f"gradsync_bucketed_serial_us_pods{n_pods}", t_serial * 1e6,
+         "all-after-backward"),
+        (f"gradsync_bucketed_async_us_pods{n_pods}", t_async * 1e6,
+         "compute-port overlap"),
+        (f"gradsync_bucketed_overlap_speedup_pods{n_pods}",
+         t_serial / t_async if t_async else 1.0, "serial/async"),
+    ]
+    table = {
+        "n_pods": n_pods,
+        "ppn": ppn,
+        "num_buckets": plan.num_buckets,
+        "target_bytes": plan.target_bytes,
+        "crossover_bytes": plan.crossover_bytes,
+        "serial_s": t_serial,
+        "async_s": t_async,
+        "speedup": t_serial / t_async if t_async else 1.0,
+        "buckets": buckets_json,
+    }
+    return csv_rows, table
+
+
+def collect() -> tuple[list, dict]:
+    """All benchmark rows plus the JSON artifact payload."""
     rows = []
+    overlap_tables = {}
     for n_pods, ppn in [(2, 16), (8, 16), (64, 16)]:
         crossover = pm.crossover_bytes(n_pods, ppn, P, large="mla")
         algos = ["rd", "smp", "nap", "mla", "mla_pip"]
@@ -84,7 +202,7 @@ def main() -> None:
             (
                 f"gradsync_crossover_bytes_pods{n_pods}",
                 crossover,
-                "nap<=x<mla",
+                "nap<=x<mla (inf = NAP never loses)",
             )
         )
         rows.append(
@@ -120,9 +238,48 @@ def main() -> None:
                     "16MiB bucket",
                 )
             )
+        csv_rows, table = overlap_section(n_pods, ppn)
+        rows.extend(csv_rows)
+        overlap_tables[f"pods{n_pods}x{ppn}"] = table
+    payload = {
+        "bench": "gradsync",
+        "machine": P.name,
+        "rows": [
+            {"name": name, "value": _json_safe(value), "derived": derived}
+            for name, value, derived in rows
+        ],
+        "overlap": _json_safe(overlap_tables),
+    }
+    return rows, payload
+
+
+def _json_safe(v):
+    """RFC 8259-safe values: a saturated crossover is ``math.inf`` by
+    design, but bare ``Infinity`` is invalid JSON — strict consumers of
+    the CI artifact (jq, JSON.parse) would reject the whole file."""
+    if isinstance(v, dict):
+        return {k: _json_safe(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    if isinstance(v, float) and not math.isfinite(v):
+        return str(v)  # "inf" / "-inf" / "nan"
+    return v
+
+
+def main(json_path: str | None = None) -> None:
+    rows, payload = collect()
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+    if json_path:
+        out = Path(json_path)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(payload, indent=2))
+        print(f"# wrote {out}", file=sys.stderr)
 
 
 if __name__ == "__main__":
-    main()
+    argv = sys.argv[1:]
+    path = None
+    if "--json" in argv:
+        path = argv[argv.index("--json") + 1]
+    main(path)

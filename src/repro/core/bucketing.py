@@ -1,0 +1,352 @@
+"""Bucket scheduler planning for gradient synchronisation.
+
+This module is the *planner* half of the grad-sync bucket scheduler
+subsystem: pure host-side math (no jax tracing) that turns the static
+metadata of a gradient pytree — leaf sizes, dtypes, transport widths —
+into a :class:`BucketPlan` the executor (:mod:`repro.core.grad_sync`)
+replays inside ``shard_map`` and the simulator
+(:func:`repro.core.simulator.simulate_bucketed_sync`) replays under the
+max-rate machine model.  Planning once, on the host, is what turns
+grad_sync from "a loop over leaves" into a scheduling layer: every
+dispatch decision (NAP vs MLA vs pipelined MLA, pipeline depth, fusion
+grouping) is solved here from the §IV cost model and pinned into the
+plan, so the traced program, the simulator replay and the cost
+accounting all execute the *same* schedule.
+
+Planning rules:
+
+* **reverse-leaf issue order** — backward produces gradients for the
+  last layers first, so buckets are packed and issued from the highest
+  leaf index down (the Horovod/DDP convention; ChainerMN's
+  double-buffered allreduce overlaps the same way).  Issuing a bucket as
+  soon as its leaves are complete is what feeds XLA's latency-hiding
+  scheduler independent collectives to overlap with remaining backward
+  compute.
+* **per-dtype fusion** — a fused bucket holds exactly one dtype.  Fusing
+  bf16 leaves by casting them to f32 silently doubled transported bytes
+  (and pushed buckets past the threshold that admitted their leaves);
+  grouping by dtype keeps every leaf at its native transport width.
+  Integer leaves never fuse (their overflow/rounding semantics are
+  per-leaf) and ride in single-leaf buckets.
+* **size-targeted buckets** — the packing target comes from
+  :func:`perf_model.optimal_bucket_bytes`: the bucket count that best
+  overlaps a uniform-rate backward with the serial network port under
+  the same dispatch costs the executor will pay per bucket.
+* **chunk-aligned boundaries** — when a bucket lands in the pipelined
+  bandwidth regime, its close point is *snapped* so the ragged pipeline
+  chunk grid (:func:`napalg.ragged_splits` — the exact offsets
+  ``mla_allreduce`` splits at) coincides with leaf boundaries where
+  possible (:func:`napalg.chunk_alignment`), instead of chunks
+  straddling leaf fragments.  Per-chip inter-node bytes for every fused
+  bucket stay at the uneven-block lower bound
+  (:func:`napalg.mla_internode_lower_bound`) — asserted in tests.
+* **transport-byte budgeting** — compressed (quantised) float leaves are
+  budgeted and dispatched at their *post-cast* transport width, not the
+  raw width, so compression genuinely moves the regime boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+from . import napalg
+
+__all__ = [
+    "LeafSpec",
+    "Bucket",
+    "BucketPlan",
+    "plan_buckets",
+    "leaf_specs_for",
+]
+
+# how many trailing leaves a snap may move to the next bucket, and the
+# smallest bucket (as a fraction of the target) a snap may leave behind
+_SNAP_WINDOW = 3
+_SNAP_MIN_FRACTION = 0.5
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """Static metadata of one gradient leaf (host-side, hashable).
+
+    ``transport_itemsize`` is the per-element byte width that actually
+    crosses the network — the quantised dtype's width for compressed
+    float leaves, the native width otherwise.  All budgeting and
+    dispatch decisions use transport bytes.
+    """
+
+    index: int
+    elems: int
+    itemsize: int
+    dtype: str
+    fusible: bool
+    transport_itemsize: int | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return self.elems * self.itemsize
+
+    @property
+    def transport_bytes(self) -> int:
+        it = self.transport_itemsize
+        return self.elems * (self.itemsize if it is None else it)
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One fused bucket: which leaves, and the pinned dispatch decision.
+
+    ``leaves`` lists original leaf indices in fusion/issue order
+    (reverse-leaf).  ``algorithm``/``chunks`` are the planner's dispatch
+    decision for the whole bucket — the executor passes them straight to
+    ``hierarchical_allreduce`` so no second decision happens at trace
+    time.
+    """
+
+    leaves: tuple[int, ...]
+    elems: int
+    nbytes: int
+    transport_bytes: int
+    dtype: str
+    algorithm: str
+    chunks: int = 1
+
+    @property
+    def chunk_splits(self) -> tuple[int, ...]:
+        """Element count of each ragged pipeline chunk — the exact splits
+        the MLA lowering executes and the simulator replays."""
+        return napalg.ragged_splits(self.elems, max(1, self.chunks))
+
+    @property
+    def chunk_boundaries(self) -> tuple[int, ...]:
+        return napalg.chunk_offsets(self.elems, max(1, self.chunks))
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    """A full bucket schedule for one gradient pytree on one grid."""
+
+    n: int
+    ppn: int
+    target_bytes: float
+    crossover_bytes: float
+    buckets: tuple[Bucket, ...]
+    signature: tuple[tuple[int, str], ...]  # (elems, dtype) per leaf
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def total_transport_bytes(self) -> int:
+        return sum(b.transport_bytes for b in self.buckets)
+
+    def sim_rows(self) -> tuple[tuple[float, str, int, int], ...]:
+        """(transport_bytes, algorithm, chunks, elems) per bucket, in
+        issue order — the simulator's replay input."""
+        return tuple(
+            (float(b.transport_bytes), b.algorithm, b.chunks, b.elems)
+            for b in self.buckets
+        )
+
+
+def leaf_specs_for(
+    shaped_leaves: Sequence, *, transport_itemsize_fn=None
+) -> tuple[LeafSpec, ...]:
+    """LeafSpecs from anything with ``.size``/``.dtype`` (arrays or
+    ShapeDtypeStructs), in leaf-index order."""
+    import numpy as np
+
+    specs = []
+    for i, leaf in enumerate(shaped_leaves):
+        dt = np.dtype(leaf.dtype)
+        fusible = bool(np.issubdtype(dt, np.floating))
+        tit = (
+            transport_itemsize_fn(dt, fusible)
+            if transport_itemsize_fn is not None
+            else None
+        )
+        specs.append(
+            LeafSpec(
+                index=i,
+                elems=int(np.prod(leaf.shape)) if leaf.shape else 1,
+                itemsize=int(dt.itemsize),
+                dtype=dt.name,
+                fusible=fusible,
+                transport_itemsize=tit,
+            )
+        )
+    return tuple(specs)
+
+
+def _decide(
+    transport_bytes: int,
+    n: int,
+    ppn: int,
+    algorithm: str,
+    op: str,
+    small_threshold_bytes: int | None,
+    pipeline_chunks: int | None,
+    params,
+) -> tuple[str, int]:
+    """(algorithm, pipeline depth) for one bucket — the single dispatch
+    decision, made at plan time with the same logic the trace-time
+    dispatcher would apply."""
+    from . import perf_model as pm
+
+    mp = params or pm.TPU_V5E_POD
+
+    def depth() -> int:
+        if pipeline_chunks is not None:
+            return max(1, int(pipeline_chunks))
+        return pm.optimal_pipeline_chunks(float(transport_bytes), n, ppn, mp)
+
+    if algorithm != "auto":
+        if algorithm == "mla_pipelined":
+            return algorithm, depth()
+        if algorithm == "mla" and pipeline_chunks is not None:
+            return algorithm, max(1, int(pipeline_chunks))
+        return algorithm, 1
+    from .collectives import select_algorithm
+
+    algo = select_algorithm(
+        int(transport_bytes),
+        n,
+        ppn,
+        params,
+        op=op,
+        small_threshold_bytes=small_threshold_bytes,
+    )
+    if algo == "mla_pipelined":
+        return algo, depth()
+    if algo == "mla" and pipeline_chunks is not None:
+        c = max(1, int(pipeline_chunks))
+        return ("mla_pipelined" if c > 1 else "mla"), c
+    return algo, 1
+
+
+@functools.lru_cache(maxsize=None)
+def plan_buckets(
+    leaf_specs: tuple[LeafSpec, ...],
+    n: int,
+    ppn: int,
+    *,
+    algorithm: str = "auto",
+    op: str = "sum",
+    small_threshold_bytes: int | None = None,
+    pipeline_chunks: int | None = None,
+    bucket_bytes: int | None = None,
+    fuse: bool = True,
+    params=None,
+) -> BucketPlan:
+    """Pack leaves into size-targeted, dtype-pure, chunk-aligned buckets.
+
+    Pure in its (hashable) inputs and cached — planning runs once per
+    (pytree structure x grid x config), off the trace path.  Buckets come
+    back in reverse-leaf issue order; every leaf appears in exactly one
+    bucket.
+    """
+    from . import perf_model as pm
+
+    mp = params or pm.TPU_V5E_POD
+    total_fusible = sum(
+        ls.transport_bytes for ls in leaf_specs if ls.fusible
+    )
+    if bucket_bytes is not None:
+        target = float(bucket_bytes)
+    else:
+        target = pm.optimal_bucket_bytes(
+            float(max(total_fusible, 1)), n, ppn, mp
+        )
+    if n > 1 and ppn > 1:
+        xo = pm.crossover_bytes(n, ppn, mp, large="mla")
+    else:
+        xo = math.inf if n <= 1 else 0.0
+
+    buckets: list[Bucket] = []
+
+    def decide(tbytes: int) -> tuple[str, int]:
+        return _decide(
+            tbytes, n, ppn, algorithm, op,
+            small_threshold_bytes, pipeline_chunks, params,
+        )
+
+    def close(run: list[LeafSpec]) -> None:
+        if not run:
+            return
+        tbytes = sum(ls.transport_bytes for ls in run)
+        algo, chunks = decide(tbytes)
+        buckets.append(
+            Bucket(
+                leaves=tuple(ls.index for ls in run),
+                elems=sum(ls.elems for ls in run),
+                nbytes=sum(ls.nbytes for ls in run),
+                transport_bytes=tbytes,
+                dtype=run[0].dtype,
+                algorithm=algo,
+                chunks=chunks,
+            )
+        )
+
+    def snap(run: list[LeafSpec]) -> list[LeafSpec]:
+        """Close point snapped to the ragged chunk grid.
+
+        Considers keeping the whole run or moving up to ``_SNAP_WINDOW``
+        trailing leaves to the next bucket; scores each candidate by how
+        well its pipeline chunk boundaries coincide with leaf boundaries
+        (:func:`napalg.chunk_alignment`).  Returns the leaves deferred to
+        the next bucket.
+        """
+        best_keep, best_score = len(run), -1.0
+        for keep in range(len(run), max(len(run) - _SNAP_WINDOW, 1) - 1, -1):
+            cand = run[:keep]
+            tbytes = sum(ls.transport_bytes for ls in cand)
+            if keep < len(run) and tbytes < _SNAP_MIN_FRACTION * target:
+                break
+            _, chunks = decide(tbytes)
+            score = napalg.chunk_alignment(
+                tuple(ls.elems for ls in cand), chunks
+            )
+            if score > best_score + 1e-12:
+                best_keep, best_score = keep, score
+            if score >= 1.0 and keep == len(run):
+                break  # whole run already aligned: no need to shrink
+        deferred = run[best_keep:]
+        close(run[:best_keep])
+        return deferred
+
+    # one open fusion buffer per dtype (the Horovod/DDP idiom): a stray
+    # f32 norm between bf16 matmul grads must not flush the bf16 run —
+    # it accumulates in its own run instead, so dtype purity costs no
+    # fragmentation.  A bucket is only issuable once its *last* leaf is
+    # produced, so closing buffers as they fill (and flushing leftovers
+    # at the end, most-recently-fed first) preserves readiness order.
+    runs: dict[str, list[LeafSpec]] = {}
+    touch: list[str] = []
+    for ls in sorted(leaf_specs, key=lambda l: -l.index):
+        if not fuse or not ls.fusible:
+            close([ls])  # int / unfusible leaf: its own bucket, in place
+            continue
+        run = runs.setdefault(ls.dtype, [])
+        if ls.dtype in touch:
+            touch.remove(ls.dtype)
+        touch.append(ls.dtype)
+        run.append(ls)
+        if sum(l.transport_bytes for l in run) >= target:
+            runs[ls.dtype] = snap(run)
+    for dt in touch:
+        run = runs.get(dt) or []
+        while run:
+            run = snap(run)
+
+    return BucketPlan(
+        n=n,
+        ppn=ppn,
+        target_bytes=float(target),
+        crossover_bytes=float(xo),
+        buckets=tuple(buckets),
+        signature=tuple((ls.elems, ls.dtype) for ls in leaf_specs),
+    )

@@ -547,6 +547,14 @@ def auto_crossover_bytes(n: int, ppn: int, params=None) -> float:
     from the §IV max-rate cost model (``perf_model.crossover_bytes`` with
     the MLA cost as the large-message contender) for the actual grid shape
     and machine constants.
+
+    Returns ``math.inf`` when NAP never loses within the model's search
+    range (saturated crossover — machines whose alpha bill dwarfs the
+    bandwidth term).  Callers must treat infinity as "latency regime for
+    every payload", not clamp it to a byte count: ``select_algorithm``
+    then routes everything to NAP, and the grad-sync planner keeps its
+    *fusion* bucket target on the separate
+    :func:`perf_model.optimal_bucket_bytes` optimum, which stays finite.
     """
     from . import perf_model as pm
 

@@ -1,4 +1,4 @@
-"""Gradient synchronisation strategies built on the paper's collectives.
+"""Gradient synchronisation: bucket-scheduled allreduce of a pytree.
 
 Two call styles:
 
@@ -8,27 +8,43 @@ Two call styles:
 * :func:`make_grad_sync` — standalone: wraps ``sync_grads_local`` in its
   own ``shard_map`` given the gradient PartitionSpecs (tests, benchmarks).
 
-Features, per the "distributed optimisation tricks" requirement:
+Since PR 3 grad_sync is a *bucket scheduler subsystem*, not a loop over
+leaves:
 
-* model-driven *three-regime switch*: buckets below the modeled NAP↔MLA
-  crossover (``perf_model.crossover_bytes`` for the actual grid shape;
-  the paper measured ~2 KiB on Blue Waters) go through NAP (latency
-  regime, the contribution); large buckets go through the striped
-  multi-lane MLA path (bandwidth regime, ``s/ppn`` bytes per lane) —
-  chunk-*pipelined* once ``perf_model.optimal_pipeline_chunks`` says the
-  bucket amortises the extra latency steps, so the biggest fused
-  parameter buckets overlap their intra-pod striping with the inter-pod
-  transfers; single-level meshes use plain psum — §VI's hybrid, with
-  every switch point solved from §IV instead of hardcoded.
-* *flat-bucket fusion*: small leaves are concatenated into one flat buffer
-  so the whole latency-bound sync costs a single NAP schedule rather than
-  one collective per tensor.
-* optional *int8 gradient compression* with a NAP-pmax shared scale (the
-  scale reduction itself is a single-scalar allreduce — the paper's
-  canonical small-message workload).
-* uniform dtype/op semantics: every leaf funnels through
-  :func:`_reduce_leaf`, so mean division and dtype round-trips behave the
-  same for float, bf16 and integer gradients on every code path.
+* the **planner** (:func:`repro.core.bucketing.plan_buckets`) packs
+  leaves into size-targeted, dtype-pure buckets whose size optimum comes
+  from :func:`perf_model.optimal_bucket_bytes` and whose boundaries are
+  snapped to the ragged pipeline-chunk grid
+  (:func:`napalg.ragged_splits`) — so a fused bucket's MLA chunks align
+  with leaf boundaries and per-chip inter-node bytes stay at the
+  uneven-block lower bound;
+* the **executor** (this module) issues buckets in reverse-leaf order —
+  the order backward produces gradients — with each bucket's algorithm
+  and pipeline depth pinned by the planner.  The buckets carry no data
+  dependencies on each other, so inside SPMD the interleaved issue order
+  feeds XLA's latency-hiding scheduler independent collectives it can
+  overlap with remaining backward compute (bucket-level async);
+* the **simulator** (:func:`repro.core.simulator.simulate_bucketed_sync`)
+  replays the same plan with a compute port, so the overlap win is
+  measurable as wall-clock.
+
+Dispatch per bucket is the model-driven three-regime switch: NAP below
+the modeled NAP↔MLA crossover (``perf_model.crossover_bytes`` for the
+actual grid; ``math.inf`` when NAP never loses — the saturated case),
+striped MLA above it, chunk-pipelined once
+``perf_model.optimal_pipeline_chunks`` says the bucket amortises the
+extra latency steps, plain psum when there is no slow domain.
+
+Optional *int8 gradient compression* quantises float leaves with
+NAP-pmax-agreed max-abs scales — **per leaf**, even inside a fused
+bucket (the per-leaf absmaxes travel as one fused small-vector
+max-allreduce, so a layer-norm grad fused next to an embedding grad
+keeps its own scale instead of being rounded to zero) — and transports
+the sums in the **narrowest integer dtype that cannot overflow**
+(``int16`` up to 257-way groups — half the bytes of the f32 payload, a
+quarter of the old int32 transport); the planner budgets compressed
+leaves at their post-cast width so the regime decision sees the bytes
+that actually move.
 """
 
 from __future__ import annotations
@@ -42,10 +58,16 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from . import collectives
+from . import bucketing, collectives
 from .. import compat
 
-__all__ = ["GradSyncConfig", "sync_grads_local", "make_grad_sync"]
+__all__ = [
+    "GradSyncConfig",
+    "sync_grads_local",
+    "make_grad_sync",
+    "plan_for_tree",
+    "compressed_transport_dtype",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,17 +79,22 @@ class GradSyncConfig:
     mean: divide by the DP group size (data-parallel averaging).  Applies
       to *every* leaf: integer gradients are averaged in float32 and
       rounded back to their dtype rather than silently left as sums.
-    compress_bits: None (off) or 8 — int8 quantised transport with a
-      shared max-abs scale (float leaves only).
-    small_threshold_bytes: NAP↔MLA crossover for "auto" and the fusion
-      bucket bound.  ``None`` (default) derives it from the §IV cost model
-      (:func:`collectives.auto_crossover_bytes`) for the actual grid.
-    fuse_small_buckets: concatenate small leaves into one flat payload.
+    compress_bits: None (off) or 8 — quantised transport with a shared
+      max-abs scale (float leaves only), summed in the narrowest safe
+      integer dtype (:func:`compressed_transport_dtype`).
+    small_threshold_bytes: NAP↔MLA dispatch crossover override.  ``None``
+      (default) derives it from the §IV cost model
+      (:func:`collectives.auto_crossover_bytes`) for the actual grid —
+      possibly ``inf`` when NAP never loses (saturated crossover).
+    fuse_small_buckets: let the planner fuse same-dtype float leaves into
+      shared buckets (False = one bucket per leaf).
+    bucket_bytes: fusion bucket size target.  ``None`` (default) takes
+      the overlap optimum from :func:`perf_model.optimal_bucket_bytes`;
+      an int pins it.
     pipeline_chunks: MLA pipeline depth for bandwidth-regime buckets.
       ``None`` (default) lets the model pick per bucket
-      (:func:`perf_model.optimal_pipeline_chunks` — large fused buckets
-      get chunk-level intra/inter overlap, small ones stay unpipelined);
-      an int pins the depth.
+      (:func:`perf_model.optimal_pipeline_chunks`); an int pins the
+      depth.
     """
 
     algorithm: str = "auto"
@@ -75,28 +102,38 @@ class GradSyncConfig:
     compress_bits: int | None = None
     small_threshold_bytes: int | None = None
     fuse_small_buckets: bool = True
+    bucket_bytes: int | None = None
     pipeline_chunks: int | None = None
 
 
-# fallback fusion bound when no slow domain exists (nothing to switch;
-# the threshold only decides which leaves share the fused flat bucket)
-_DEFAULT_FUSE_BYTES = 2048
+# NOTE: the old ``_resolved_threshold`` helper (whose ``isfinite`` guard
+# silently accepted ``crossover_bytes``'s former behaviour of returning
+# its 4 MiB search cap) is gone with its only caller: the dispatch
+# threshold now flows through ``bucketing.plan_buckets`` into
+# ``collectives.select_algorithm``, where a saturated (``math.inf``)
+# crossover correctly means "latency regime for every payload", and the
+# *fusion* bucket target is the separate, always-finite
+# :func:`perf_model.optimal_bucket_bytes` optimum.
 
 
-def _resolved_threshold(
-    cfg: GradSyncConfig, inter_axes, intra_axes
-) -> float:
-    """The byte threshold actually in force (fixed or model-driven)."""
-    if cfg.small_threshold_bytes is not None:
-        return float(cfg.small_threshold_bytes)
-    if not inter_axes:
-        return float(_DEFAULT_FUSE_BYTES)
-    import math
+def compressed_transport_dtype(group: int, bits: int) -> jnp.dtype:
+    """Narrowest integer dtype that can hold a ``group``-way sum of
+    ``bits``-bit quantised values without overflow.
 
-    n = int(np.prod([compat.axis_size(a) for a in inter_axes]))
-    ppn = int(np.prod([compat.axis_size(a) for a in intra_axes]))
-    xo = collectives.auto_crossover_bytes(n, ppn)
-    return xo if math.isfinite(xo) else float(_DEFAULT_FUSE_BYTES)
+    Quantised magnitudes are bounded by ``qmax = 2**(bits-1) - 1``, so
+    the reduced sum is bounded by ``group * qmax``: int8 suffices only
+    for a single rank, int16 up to 257-way groups (257 * 127 = 32639),
+    int32 beyond.  Transporting int16 instead of the old int32 halves
+    the bytes the "compressed" path actually moves — with int32 an
+    8-bit-quantised f32 payload shipped exactly as many bytes as the
+    uncompressed one.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    peak = max(1, int(group)) * qmax
+    for dt in (jnp.int8, jnp.int16, jnp.int32):
+        if peak <= jnp.iinfo(dt).max:
+            return jnp.dtype(dt)
+    return jnp.dtype(jnp.int64)
 
 
 def _one_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
@@ -113,13 +150,24 @@ def _one_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
     )
 
 
-def _compressed_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
-    """int8-quantised allreduce with a globally agreed max-abs scale.
+def _compressed_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes, group):
+    """Quantised allreduce with a globally agreed max-abs scale.
 
     Returns float32; :func:`_reduce_leaf` restores the caller's dtype.
+    The quantised payload travels in the narrowest integer dtype safe
+    for a ``group``-way sum (:func:`compressed_transport_dtype`), so the
+    byte accounting — and the planner's regime decision, which budgets
+    compressed leaves at this width — reflects the compression instead
+    of shipping int32 words as wide as the original f32 payload.
     """
     bits = cfg.compress_bits
     qmax = float(2 ** (bits - 1) - 1)
+    tdtype = compressed_transport_dtype(group, bits)
+    # byte accounting: whenever the group-sum bound fits int16, the
+    # transport must genuinely be narrower than the f32 it replaces
+    # (int32 moved exactly as many bytes as uncompressed f32)
+    if int(group) * int(qmax) <= jnp.iinfo(jnp.int16).max:
+        assert tdtype.itemsize < jnp.dtype(jnp.float32).itemsize
     absmax = jnp.max(jnp.abs(x)).astype(jnp.float32)
     if inter_axes:
         absmax = collectives.nap_allreduce(
@@ -128,24 +176,69 @@ def _compressed_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
     else:
         absmax = lax.pmax(absmax, intra_axes)
     scale = jnp.maximum(absmax / qmax, 1e-30)
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(tdtype)
     summed = _one_allreduce(q, cfg, inter_axes, intra_axes)
     return summed.astype(jnp.float32) * scale
 
 
-def _reduce_leaf(g, cfg: GradSyncConfig, inter_axes, intra_axes, group):
-    """Allreduce one leaf with op/mean/dtype semantics in one place.
+def _compressed_fused_allreduce(
+    parts, cfg: GradSyncConfig, inter_axes, intra_axes, group
+):
+    """Quantised allreduce of a fused bucket with *per-leaf* scales.
 
-    Every leaf — float, bf16, integer, fused flat bucket — funnels through
-    here so the transport dtype, the mean division and the round-trip back
-    to the original dtype cannot diverge between code paths (they used to:
-    integer leaves skipped ``mean`` silently and the compressed path
-    returned hardcoded float32).
+    One shared max-abs scale across a whole fused bucket would be set by
+    its largest-magnitude leaf, rounding a small-magnitude neighbour
+    (layer-norm grads next to embedding grads) entirely to zero.  Each
+    leaf keeps its own scale instead: the per-leaf absmaxes are agreed
+    in a *single* fused small-vector max-allreduce (one latency-bound
+    collective, not one per leaf — the paper's canonical workload), the
+    quantised leaves are concatenated and summed in one transport-dtype
+    allreduce, and each segment is dequantised with its own scale.
+    Returns the per-leaf float32 sums, in ``parts`` order.
+    """
+    bits = cfg.compress_bits
+    qmax = float(2 ** (bits - 1) - 1)
+    tdtype = compressed_transport_dtype(group, bits)
+    if int(group) * int(qmax) <= jnp.iinfo(jnp.int16).max:
+        assert tdtype.itemsize < jnp.dtype(jnp.float32).itemsize
+    absmax = jnp.stack(
+        [jnp.max(jnp.abs(p)).astype(jnp.float32) for p in parts]
+    )
+    if inter_axes:
+        absmax = collectives.nap_allreduce(
+            absmax, inter_axes=inter_axes, intra_axes=intra_axes, op="max"
+        )
+    else:
+        absmax = lax.pmax(absmax, intra_axes)
+    scales = jnp.maximum(absmax / qmax, 1e-30)
+    q = jnp.concatenate(
+        [
+            jnp.clip(jnp.round(p / scales[i]), -qmax, qmax).astype(tdtype)
+            for i, p in enumerate(parts)
+        ]
+    )
+    summed = _one_allreduce(q, cfg, inter_axes, intra_axes)
+    outs, off = [], 0
+    for i, p in enumerate(parts):
+        seg = summed[off : off + p.size].astype(jnp.float32) * scales[i]
+        outs.append(seg)
+        off += p.size
+    return outs
+
+
+def _reduce_leaf(g, cfg: GradSyncConfig, inter_axes, intra_axes, group):
+    """Allreduce one payload with op/mean/dtype semantics in one place.
+
+    Every payload — float, bf16, integer, fused flat bucket — funnels
+    through here so the transport dtype, the mean division and the
+    round-trip back to the original dtype cannot diverge between code
+    paths (they used to: integer leaves skipped ``mean`` silently and
+    the compressed path returned hardcoded float32).
     """
     dtype = g.dtype
     is_float = jnp.issubdtype(dtype, jnp.floating)
     if cfg.compress_bits and is_float:
-        red = _compressed_allreduce(g, cfg, inter_axes, intra_axes)
+        red = _compressed_allreduce(g, cfg, inter_axes, intra_axes, group)
     else:
         red = _one_allreduce(g, cfg, inter_axes, intra_axes)
     if cfg.mean and group > 1:
@@ -156,14 +249,131 @@ def _reduce_leaf(g, cfg: GradSyncConfig, inter_axes, intra_axes, group):
     return red.astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# planner interface
+# ---------------------------------------------------------------------------
+
+
+def _leaf_specs(leaves, cfg: GradSyncConfig, group: int):
+    def transport_itemsize(dt, fusible):
+        if cfg.compress_bits and fusible:
+            return int(
+                compressed_transport_dtype(group, cfg.compress_bits).itemsize
+            )
+        return None
+
+    return bucketing.leaf_specs_for(
+        leaves, transport_itemsize_fn=transport_itemsize
+    )
+
+
+def _plan(leaves, cfg: GradSyncConfig, n: int, ppn: int, group: int):
+    threshold = (
+        cfg.small_threshold_bytes
+        if cfg.small_threshold_bytes is None
+        else int(cfg.small_threshold_bytes)
+    )
+    return bucketing.plan_buckets(
+        _leaf_specs(leaves, cfg, group),
+        n,
+        ppn,
+        algorithm=cfg.algorithm,
+        small_threshold_bytes=threshold,
+        pipeline_chunks=cfg.pipeline_chunks,
+        bucket_bytes=cfg.bucket_bytes,
+        fuse=cfg.fuse_small_buckets,
+    )
+
+
+def plan_for_tree(
+    tree: Any, *, cfg: GradSyncConfig, n: int, ppn: int
+) -> bucketing.BucketPlan:
+    """Bucket plan for a gradient pytree (arrays or ShapeDtypeStructs).
+
+    Host-side and trace-free: the trainer calls this once on the
+    abstract gradient tree (``jax.eval_shape``) to own the per-bucket
+    issue points, then hands the plan to :func:`sync_grads_local` so the
+    traced program executes exactly the schedule that was planned (and
+    that the simulator prices).
+    """
+    leaves = jax.tree.flatten(tree)[0]
+    group = max(1, n) * max(1, ppn)
+    return _plan(leaves, cfg, n, ppn, group)
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+
+
+def _bucket_cfg(cfg: GradSyncConfig, bucket) -> GradSyncConfig:
+    """The per-bucket config: the planner's decision, pinned.
+
+    ``small_threshold_bytes`` is cleared because the algorithm is already
+    resolved — the trace-time dispatcher must not re-decide."""
+    return dataclasses.replace(
+        cfg,
+        algorithm=bucket.algorithm,
+        pipeline_chunks=bucket.chunks,
+        small_threshold_bytes=None,
+    )
+
+
+def _execute_plan(leaves, plan, cfg, inter_axes, intra_axes, group):
+    """Issue every bucket's collective in plan (reverse-leaf) order.
+
+    Buckets are data-independent; issuing them as separate collectives
+    in backward-completion order is what lets XLA's latency-hiding
+    scheduler overlap bucket ``b``'s transfer with the compute that
+    produces bucket ``b+1`` — the in-SPMD form of bucket-level async.
+    """
+    out = [None] * len(leaves)
+    for bucket in plan.buckets:
+        bcfg = _bucket_cfg(cfg, bucket)
+        if len(bucket.leaves) == 1:
+            i = bucket.leaves[0]
+            out[i] = _reduce_leaf(
+                leaves[i], bcfg, inter_axes, intra_axes, group
+            )
+            continue
+        parts = [leaves[i].reshape(-1) for i in bucket.leaves]
+        is_float = jnp.issubdtype(leaves[bucket.leaves[0]].dtype, jnp.floating)
+        if cfg.compress_bits and is_float:
+            # fused + compressed: per-leaf scales (a shared scale would
+            # zero out small-magnitude leaves), mean/dtype per segment
+            segs = _compressed_fused_allreduce(
+                parts, bcfg, inter_axes, intra_axes, group
+            )
+            for i, seg in zip(bucket.leaves, segs):
+                g = leaves[i]
+                if cfg.mean and group > 1:
+                    seg = seg / group
+                out[i] = seg.reshape(g.shape).astype(g.dtype)
+            continue
+        flat = jnp.concatenate(parts)
+        red = _reduce_leaf(flat, bcfg, inter_axes, intra_axes, group)
+        off = 0
+        for i in bucket.leaves:
+            g = leaves[i]
+            out[i] = red[off : off + g.size].reshape(g.shape)
+            off += g.size
+    return out
+
+
 def sync_grads_local(
     grads: Any,
     *,
     cfg: GradSyncConfig,
     inter_axes: tuple[str, ...],
     intra_axes: tuple[str, ...],
+    plan: bucketing.BucketPlan | None = None,
 ) -> Any:
-    """Synchronise a pytree of per-chip local gradients (inside shard_map)."""
+    """Synchronise a pytree of per-chip local gradients (inside shard_map).
+
+    ``plan`` (optional) is a precomputed :func:`plan_for_tree` result —
+    the trainer's per-bucket issue points.  When omitted, the plan is
+    solved here (host-side, cached per pytree signature x grid x config).
+    """
     axes = tuple(inter_axes) + tuple(intra_axes)
     group = int(
         np.prod([compat.axis_size(a) for a in axes]) if axes else 1
@@ -172,30 +382,29 @@ def sync_grads_local(
     if not leaves:
         return grads
 
-    threshold = _resolved_threshold(cfg, inter_axes, intra_axes)
-    small_idx = [
-        i
-        for i, g in enumerate(leaves)
-        if cfg.fuse_small_buckets
-        and g.size * g.dtype.itemsize <= threshold
-        and jnp.issubdtype(g.dtype, jnp.floating)
-    ]
-    out = list(leaves)
-    if len(small_idx) > 1:
-        flat = jnp.concatenate(
-            [leaves[i].astype(jnp.float32).reshape(-1) for i in small_idx]
+    if plan is None:
+        n = int(
+            np.prod([compat.axis_size(a) for a in inter_axes])
+            if inter_axes
+            else 1
         )
-        flat = _reduce_leaf(flat, cfg, inter_axes, intra_axes, group)
-        off = 0
-        for i in small_idx:
-            g = leaves[i]
-            out[i] = flat[off : off + g.size].reshape(g.shape).astype(g.dtype)
-            off += g.size
-        rest = [i for i in range(len(leaves)) if i not in set(small_idx)]
+        ppn = int(
+            np.prod([compat.axis_size(a) for a in intra_axes])
+            if intra_axes
+            else 1
+        )
+        plan = _plan(leaves, cfg, n, ppn, group)
     else:
-        rest = list(range(len(leaves)))
-    for i in rest:
-        out[i] = _reduce_leaf(leaves[i], cfg, inter_axes, intra_axes, group)
+        sig = tuple(
+            (int(np.prod(g.shape)) if g.shape else 1, np.dtype(g.dtype).name)
+            for g in leaves
+        )
+        if sig != plan.signature:
+            raise ValueError(
+                "bucket plan does not match the gradient pytree "
+                f"(plan for {plan.signature}, got {sig})"
+            )
+    out = _execute_plan(leaves, plan, cfg, inter_axes, intra_axes, group)
     return jax.tree.unflatten(treedef, out)
 
 

@@ -74,6 +74,8 @@ __all__ = [
     "build_mla_schedule",
     "build_mla_pipelined_schedule",
     "ragged_splits",
+    "chunk_offsets",
+    "chunk_alignment",
     "mla_stripe_geometry",
     "mla_internode_lower_bound",
     "step_mask_tables",
@@ -503,6 +505,46 @@ def ragged_splits(total: int, k: int) -> tuple[int, ...]:
         raise ValueError("k must be positive")
     base, rem = divmod(total, k)
     return tuple(base + 1 if i < rem else base for i in range(k))
+
+
+def chunk_offsets(total: int, k: int) -> tuple[int, ...]:
+    """Interior boundaries of the ragged ``k``-way chunk grid.
+
+    The cumulative offsets of :func:`ragged_splits` (excluding 0 and
+    ``total``) — the exact positions at which the chunk-pipelined MLA
+    lowering splits a flat payload.  The bucket planner snaps fused-bucket
+    boundaries to this grid so a bucket's pipeline chunks align with leaf
+    boundaries instead of straddling leaf fragments.
+    """
+    out, off = [], 0
+    for ce in ragged_splits(total, k)[:-1]:
+        off += ce
+        out.append(off)
+    return tuple(out)
+
+
+def chunk_alignment(part_sizes: Sequence[int], k: int) -> float:
+    """Fraction of the ragged ``k``-chunk grid's interior boundaries that
+    coincide with part (leaf) boundaries of a fused payload.
+
+    ``part_sizes`` are the element counts of the payload's constituent
+    parts, in fusion order.  1.0 means every pipeline chunk is a whole
+    number of leaves (no chunk straddles a leaf fragment); ``k <= 1`` is
+    trivially aligned.  Used by the bucket planner to score candidate
+    bucket close points.
+    """
+    total = int(sum(part_sizes))
+    if k <= 1 or total == 0:
+        return 1.0
+    bounds = chunk_offsets(total, k)
+    if not bounds:
+        return 1.0
+    leaf_bounds, off = set(), 0
+    for sz in part_sizes:
+        off += int(sz)
+        leaf_bounds.add(off)
+    hit = sum(1 for b in bounds if b in leaf_bounds)
+    return hit / len(bounds)
 
 
 def mla_stripe_geometry(

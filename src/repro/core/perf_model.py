@@ -24,6 +24,7 @@ All sizes are bytes, all times seconds.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 __all__ = [
@@ -39,6 +40,8 @@ __all__ = [
     "cost_mla_pipelined",
     "optimal_pipeline_chunks",
     "crossover_bytes",
+    "dispatched_allreduce_cost",
+    "optimal_bucket_bytes",
 ]
 
 
@@ -247,12 +250,19 @@ def crossover_bytes(
     """Smallest message size where the ``large``-regime algorithm becomes
     cheaper than NAP (the paper measured ~2048 B vs SMP at 32 768
     processes).  ``large="mla"`` yields the dispatcher's NAP↔MLA switch
-    point."""
+    point.
+
+    Returns ``math.inf`` when NAP is still cheaper at the search cap
+    ``hi`` — there is no crossover in the searched range, and callers
+    (``collectives.auto_crossover_bytes``, the grad-sync planner) treat
+    the saturated result as "latency regime everywhere" instead of
+    mistaking the cap for a real 4 MiB switch point.
+    """
     cost_large = _LARGE_COSTS[large]
     if cost_nap(lo, n, ppn, p) > cost_large(lo, n, ppn, p):
         return lo
     if cost_nap(hi, n, ppn, p) <= cost_large(hi, n, ppn, p):
-        return hi
+        return math.inf
     while hi / lo > 1.01:
         mid = math.sqrt(lo * hi)
         if cost_nap(mid, n, ppn, p) <= cost_large(mid, n, ppn, p):
@@ -260,3 +270,85 @@ def crossover_bytes(
         else:
             hi = mid
     return math.sqrt(lo * hi)
+
+
+def dispatched_allreduce_cost(
+    s: float, n: int, ppn: int, p: MachineParams
+) -> float:
+    """Modeled cost of one ``s``-byte allreduce under the auto dispatch.
+
+    Mirrors ``collectives.select_algorithm``'s regime choice in pure
+    closed form: NAP at or below the NAP↔MLA crossover, the best of
+    plain/pipelined MLA above it, single-domain costs on degenerate
+    grids.  This is the per-bucket cost term the bucket-size optimum
+    integrates over, so the planner and the dispatcher price a bucket
+    identically.
+    """
+    if n <= 1:
+        # single-level: intra recursive doubling only
+        return (p.alpha_l + p.beta_l * s + p.gamma * s) * _log2(ppn)
+    if ppn <= 1:
+        # degenerate lanes: RS+AG over the slow domain (the mla fallback)
+        return cost_mla(s, n, 1, p)
+    xo = crossover_bytes(n, ppn, p, large="mla")
+    if s <= xo:
+        return cost_nap(s, n, ppn, p)
+    return cost_mla_pipelined(s, n, ppn, p, chunks=None)
+
+
+@functools.lru_cache(maxsize=None)
+def _optimal_bucket_count(
+    total_bytes: float,
+    n: int,
+    ppn: int,
+    p: MachineParams,
+    compute_seconds: float | None,
+    max_buckets: int,
+) -> int:
+    best_k, best_t = 1, math.inf
+    t_one = dispatched_allreduce_cost(total_bytes, n, ppn, p)
+    tc = compute_seconds if compute_seconds is not None else t_one
+    for k in range(1, max(1, max_buckets) + 1):
+        s = total_bytes / k
+        t = dispatched_allreduce_cost(s, n, ppn, p)
+        free = 0.0
+        for i in range(k):
+            ready = (i + 1) * tc / k
+            free = max(free, ready) + t
+        if free < best_t - 1e-15:
+            best_k, best_t = k, free
+    return best_k
+
+
+def optimal_bucket_bytes(
+    total_bytes: float,
+    n: int,
+    ppn: int,
+    p: MachineParams,
+    *,
+    compute_seconds: float | None = None,
+    max_buckets: int = 64,
+) -> float:
+    """Model-optimal grad-sync bucket size for backward/comm overlap.
+
+    Backward is modeled as producing gradient bytes at a uniform rate
+    over ``compute_seconds`` (default: the unbucketed sync time — the
+    comm ≈ compute regime where bucketing matters most), and the network
+    as one port executing bucket allreduces back to back.  With ``k``
+    equal buckets, bucket ``i`` becomes ready at ``(i+1)/k * T_c`` and
+    the makespan follows the serial-port recurrence
+
+        free_i = max(free_{i-1}, ready_i) + T_allreduce(S/k)
+
+    More buckets expose more overlap but pay the per-bucket alpha bill
+    ``k`` times; fewer serialize the whole sync behind the last gradient.
+    The optimum is found by evaluating ``k = 1..max_buckets`` exactly
+    (each candidate is a closed-form sum — cheap) under the same
+    dispatch costs the executor will incur per bucket.
+    """
+    if total_bytes <= 0:
+        return float(total_bytes)
+    k = _optimal_bucket_count(
+        float(total_bytes), n, ppn, p, compute_seconds, max_buckets
+    )
+    return float(total_bytes) / k

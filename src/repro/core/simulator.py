@@ -20,6 +20,12 @@ phases genuinely overlap chunk ``c``'s inter phases and the overlap win
 appears as reduced clock skew, not as an assumed formula.  Ragged
 stripes replay with their exact per-pair (uneven-block) message sizes.
 
+Bucketed grad-sync plans are replayed with a *compute port*
+(:func:`simulate_bucketed_sync`): backward produces each bucket's
+gradients at a given clock and the async executor overlaps earlier
+buckets' transfers with later buckets' compute, so the bucket-overlap
+win of the grad_sync scheduler is measurable as wall-clock.
+
 Vectorised with NumPy: each step processes all messages at once (each chip
 receives at most one message per round by schedule construction).
 """
@@ -34,7 +40,12 @@ import numpy as np
 from . import napalg
 from .perf_model import MachineParams
 
-__all__ = ["simulate_time", "simulate_algorithm", "internode_bytes_per_chip"]
+__all__ = [
+    "simulate_time",
+    "simulate_algorithm",
+    "simulate_bucketed_sync",
+    "internode_bytes_per_chip",
+]
 
 
 def _local_allreduce_time(
@@ -258,6 +269,74 @@ def simulate_algorithm(
     """
     # the schedule builders are lru_cached, so no cache layer needed here
     return simulate_time(_build(algo, n_nodes, ppn, s, p, chunks, elems), s, p)
+
+
+def _bucket_duration(
+    nbytes: float,
+    algo: str,
+    n_nodes: int,
+    ppn: int,
+    p: MachineParams,
+    chunks: int | None,
+    elems: int | None,
+) -> float:
+    """Replayed wall-time of one bucket's collective."""
+    if algo == "psum" or n_nodes <= 1:
+        # single-level native reduce: intra RD rounds only
+        rounds = math.ceil(math.log2(max(2, n_nodes * ppn)))
+        return rounds * (p.alpha_l + p.beta_l * nbytes + p.gamma * nbytes)
+    return simulate_time(
+        _build(algo, n_nodes, ppn, nbytes, p, chunks, elems), nbytes, p
+    )
+
+
+def simulate_bucketed_sync(
+    buckets,
+    n_nodes: int,
+    ppn: int,
+    p: MachineParams,
+    *,
+    compute_times=None,
+    overlap: bool = True,
+) -> float:
+    """Wall-clock of a bucketed grad sync replayed with a compute port.
+
+    ``buckets`` is a sequence of ``(nbytes, algorithm, chunks, elems)``
+    rows in issue order — exactly what ``BucketPlan.sim_rows()`` emits —
+    and ``compute_times[i]`` is the clock at which backward has produced
+    bucket ``i``'s gradients (the compute port; defaults to all zero).
+    Each bucket's collective is replayed through the event-driven
+    schedule simulator (ragged stripes, pipelined chunks, donor rounds
+    and all) to get its duration; the network port then executes buckets
+    back to back:
+
+    * ``overlap=True`` (the async executor): bucket ``i`` starts at
+      ``max(network free, compute_times[i])`` — transfers hide behind
+      the compute that produces later buckets;
+    * ``overlap=False`` (the old serial sync): nothing starts until the
+      *last* gradient exists, then every bucket runs in sequence.
+
+    The async wall-clock is never worse than the serial one (asserted in
+    tests on a 16x16 grid) — the measurable form of the bucket-overlap
+    claim rather than an assumed formula.
+    """
+    rows = list(buckets)
+    if not rows:
+        return 0.0
+    if compute_times is None:
+        compute_times = [0.0] * len(rows)
+    if len(compute_times) != len(rows):
+        raise ValueError("compute_times must have one entry per bucket")
+    durations = [
+        _bucket_duration(float(nb), algo, n_nodes, ppn, p, ch, el)
+        for nb, algo, ch, el in rows
+    ]
+    if overlap:
+        free = 0.0
+        for ready, dur in zip(compute_times, durations):
+            free = max(free, float(ready)) + dur
+        return free
+    return float(max(compute_times)) + sum(durations)
 
 
 def internode_bytes_per_chip(

@@ -182,8 +182,7 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
     technique integrated end-to-end in training.  Numerically equivalent
     to the ``psum`` baseline (asserted in tests).
     """
-    from ..core import collectives
-    from ..core.grad_sync import sync_grads_local
+    from ..core import collectives, grad_sync
     from ..models import ShardingPolicy
     from .mesh import hierarchy_axes
 
@@ -193,14 +192,29 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
     dp = tuple(inter) + tuple(intra)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     group = int(np.prod([sizes[a] for a in dp]))
+    n = int(np.prod([sizes[a] for a in inter])) if inter else 1
+    ppn = int(np.prod([sizes[a] for a in intra])) if intra else 1
+
+    # the trainer owns the per-bucket issue points: the bucket schedule is
+    # planned once from the abstract gradient tree (same structure/dtypes
+    # as the parameters) and pinned into every traced step, so the issue
+    # order the scheduler decided is exactly what the SPMD program runs
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    bucket_plan = grad_sync.plan_for_tree(
+        params_sds, cfg=sync_cfg, n=n, ppn=ppn
+    )
 
     def local_step(state, batch):
         params, opt = state["params"], state["opt"]
         (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
             params, batch
         )
-        grads = sync_grads_local(
-            grads, cfg=sync_cfg, inter_axes=inter, intra_axes=intra
+        grads = grad_sync.sync_grads_local(
+            grads,
+            cfg=sync_cfg,
+            inter_axes=inter,
+            intra_axes=intra,
+            plan=bucket_plan,
         )
         # the paper's canonical workload: single-scalar latency-bound
         # allreduce (loss mean) through the same algorithm

@@ -648,6 +648,164 @@ def check_grad_sync_pipelined():
     record("grad_sync_pipelined", ok)
 
 
+def check_grad_sync_bucketed():
+    """The bucket scheduler: mixed-dtype trees fuse into dtype-pure
+    buckets (no bf16->f32 transport inflation), int leaves ride alone,
+    and the executed bucketed sync still produces the exact mean."""
+    from repro.core import bucketing, grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(41)
+    grads = {
+        "w0": jnp.asarray(rng.normal(size=(16, 300)).astype(np.float32)),
+        "n0": jnp.asarray(
+            rng.normal(size=(16, 8)).astype(np.float32)
+        ).astype(jnp.bfloat16),
+        "w1": jnp.asarray(rng.normal(size=(16, 500)).astype(np.float32)),
+        "n1": jnp.asarray(
+            rng.normal(size=(16, 16)).astype(np.float32)
+        ).astype(jnp.bfloat16),
+        "steps": jnp.asarray(
+            rng.integers(-30, 30, size=(16, 2)).astype(np.int32)
+        ),
+    }
+    specs = {k: P(("pod", "data")) for k in grads}
+    cfg = grad_sync.GradSyncConfig(algorithm="auto", mean=True)
+    # the plan the executor will run (local leaves: lead dim 1)
+    local_tree = jax.tree.map(
+        lambda g: jax.ShapeDtypeStruct((1,) + g.shape[1:], g.dtype), grads
+    )
+    plan = grad_sync.plan_for_tree(local_tree, cfg=cfg, n=4, ppn=4)
+    ok = sorted(i for b in plan.buckets for i in b.leaves) == list(range(5))
+    for b in plan.buckets:
+        leaves = jax.tree.flatten(local_tree)[0]
+        ok &= all(leaves[i].dtype == jnp.dtype(b.dtype) for i in b.leaves)
+        if b.dtype == "int32":
+            ok &= len(b.leaves) == 1
+        if b.dtype == "bfloat16":
+            # native-width budgeting: 2 bytes/elem, not a 4-byte cast
+            ok &= b.transport_bytes == 2 * b.elems
+    # at least one genuinely fused (multi-leaf) bucket exists
+    ok &= any(len(b.leaves) > 1 for b in plan.buckets)
+
+    sync = grad_sync.make_grad_sync(
+        cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+    )
+    out = jax.jit(sync)(grads)
+    for k in grads:
+        ref = np.asarray(grads[k].astype(jnp.float32), dtype=np.float64)
+        want = ref.mean(axis=0)
+        if k == "steps":
+            want = np.round(want)
+        got = np.asarray(out[k].astype(jnp.float32))
+        tol = 2e-2 if k.startswith("n") else 1e-5
+        ok &= out[k].dtype == grads[k].dtype
+        ok &= np.allclose(got, np.tile(want, (16, 1)), rtol=tol, atol=tol)
+    record("grad_sync_bucketed_mixed_dtype", ok)
+
+    # single-small-leaf tree: one bucket, no fusion machinery, exact mean
+    single = {"only": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))}
+    plan1 = grad_sync.plan_for_tree(
+        {"only": jax.ShapeDtypeStruct((1, 3), jnp.float32)},
+        cfg=cfg, n=4, ppn=4,
+    )
+    ok = plan1.num_buckets == 1 and plan1.buckets[0].leaves == (0,)
+    sync = grad_sync.make_grad_sync(
+        cfg, mesh, data_axes=("pod", "data"),
+        grad_specs={"only": P(("pod", "data"))},
+    )
+    out = jax.jit(sync)(single)
+    want = np.asarray(single["only"]).mean(axis=0)
+    ok &= np.allclose(np.asarray(out["only"]), np.tile(want, (16, 1)))
+    record("grad_sync_single_leaf", ok)
+
+    # pinned plan (trainer-style issue points) == plan-free execution
+    def with_plan(g):
+        return grad_sync.sync_grads_local(
+            g, cfg=cfg, inter_axes=("pod",), intra_axes=("data",),
+            plan=plan,
+        )
+
+    fn = jax.jit(
+        compat.shard_map(
+            with_plan, mesh=mesh, in_specs=(specs,), out_specs=specs
+        )
+    )
+    out2 = fn(grads)
+    out1 = jax.jit(
+        grad_sync.make_grad_sync(
+            cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+        )
+    )(grads)
+    ok = all(
+        np.allclose(
+            np.asarray(out1[k].astype(jnp.float32)),
+            np.asarray(out2[k].astype(jnp.float32)),
+        )
+        for k in grads
+    )
+    record("grad_sync_pinned_plan", ok)
+
+
+def check_grad_sync_compressed_int16():
+    """Satellite 3: with a 16-way group the quantised transport must ride
+    int16 (half the f32 bytes) and still sum within quantisation error."""
+    from repro.core import grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(43)
+    ok = grad_sync.compressed_transport_dtype(16, 8) == jnp.dtype(jnp.int16)
+    grads = {
+        "g": jnp.asarray(rng.normal(size=(16, 4000)).astype(np.float32))
+    }
+    specs = {"g": P(("pod", "data"))}
+    cfg = grad_sync.GradSyncConfig(
+        algorithm="auto", mean=False, compress_bits=8
+    )
+    sync = grad_sync.make_grad_sync(
+        cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+    )
+    compiled = jax.jit(sync).lower(grads).compile()
+    hlo = compiled.as_text()
+    # the payload-sized transport must appear as s16, never s32
+    ok &= "s16[" in hlo
+    out = compiled(grads)
+    want = np.asarray(grads["g"]).sum(axis=0)
+    scale = np.abs(np.asarray(grads["g"])).max() * 16
+    ok &= np.abs(np.asarray(out["g"]) - want).max() < scale * (2.0 / 127)
+    record("grad_sync_compressed_int16", ok)
+
+    # fused + compressed: per-leaf scales.  A tiny-magnitude leaf fused
+    # next to a large-magnitude one must survive within ITS OWN quant
+    # error, not be rounded to zero by a shared bucket-wide scale.
+    grads2 = {
+        "ln": jnp.asarray(
+            (1e-4 * rng.normal(size=(16, 64))).astype(np.float32)
+        ),
+        "emb": jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32)),
+    }
+    specs2 = {k: P(("pod", "data")) for k in grads2}
+    cfg2 = grad_sync.GradSyncConfig(
+        algorithm="auto", mean=False, compress_bits=8,
+        bucket_bytes=1 << 20,  # force both leaves into one fused bucket
+    )
+    plan = grad_sync.plan_for_tree(
+        {k: jax.ShapeDtypeStruct((1, 64), jnp.float32) for k in grads2},
+        cfg=cfg2, n=4, ppn=4,
+    )
+    ok = any(len(b.leaves) == 2 for b in plan.buckets)  # genuinely fused
+    sync = grad_sync.make_grad_sync(
+        cfg2, mesh, data_axes=("pod", "data"), grad_specs=specs2
+    )
+    out = jax.jit(sync)(grads2)
+    for k in grads2:
+        arr = np.asarray(grads2[k])
+        want = arr.sum(axis=0)
+        tol = np.abs(arr).max() * 16 * (2.0 / 127)  # per-LEAF quant error
+        ok &= np.abs(np.asarray(out[k]) - want).max() < tol
+    record("grad_sync_compressed_per_leaf_scale", ok)
+
+
 def check_dp_training_nap_equals_psum():
     """End-to-end: a few training steps with NAP gradient sync must match
     the psum baseline bit-for-bit-ish (same reduction, different schedule)
@@ -776,6 +934,8 @@ def main():
     check_grad_sync_dtypes()
     check_grad_sync_mla()
     check_grad_sync_pipelined()
+    check_grad_sync_bucketed()
+    check_grad_sync_compressed_int16()
     check_dp_training_nap_equals_psum()
     check_nap_extensions()
     print("RESULTS_JSON:" + json.dumps(RESULTS))

@@ -1,0 +1,374 @@
+"""Bucket scheduler planner + grad-sync edge cases (host-side).
+
+Covers the PR-3 tentpole and satellites: size-targeted dtype-pure
+packing, chunk-aligned bucket boundaries (ragged-split geometry, per-chip
+inter-node bytes at the uneven-block lower bound), the saturated
+crossover (``math.inf``, not the 4 MiB search cap), the narrowed
+compressed transport dtype, the bucket-size optimum, and the simulator's
+compute-port replay showing async bucketed sync <= serial sync.
+Execution correctness of the same plans runs in the multi-device suite
+(tests/_multidevice_checks.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import bucketing, napalg, perf_model as pm, simulator as sim
+
+TPU = pm.TPU_V5E_POD
+
+# a machine whose bandwidth is effectively free: the alpha bill dominates
+# at every size, so NAP (fewest inter-node steps) never loses and the
+# NAP↔MLA crossover saturates
+SATURATED = pm.MachineParams(
+    alpha_l=1.0e-6,
+    beta_l=1.0e-30,
+    alpha=1.0e-4,
+    R_b=1.0e30,
+    R_N=1.0e30,
+    gamma=0.0,
+    name="saturated",
+)
+
+
+def _leaf(i, elems, itemsize=4, dtype="float32", fusible=True, tit=None):
+    return bucketing.LeafSpec(
+        index=i, elems=elems, itemsize=itemsize, dtype=dtype,
+        fusible=fusible, transport_itemsize=tit,
+    )
+
+
+def _covered_indices(plan):
+    out = []
+    for b in plan.buckets:
+        out.extend(b.leaves)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# packing invariants
+# ---------------------------------------------------------------------------
+
+
+def test_every_leaf_in_exactly_one_bucket():
+    leaves = tuple(
+        _leaf(i, 256 * (1 + i % 5)) for i in range(23)
+    ) + (_leaf(23, 7, dtype="int32", fusible=False),)
+    plan = bucketing.plan_buckets(leaves, 8, 16)
+    got = _covered_indices(plan)
+    assert sorted(got) == list(range(24))
+
+
+def test_buckets_are_dtype_pure_and_issue_reverse():
+    leaves = (
+        _leaf(0, 100, 4, "float32"),
+        _leaf(1, 100, 2, "bfloat16"),
+        _leaf(2, 100, 4, "float32"),
+        _leaf(3, 100, 2, "bfloat16"),
+    )
+    plan = bucketing.plan_buckets(leaves, 4, 4, bucket_bytes=1 << 20)
+    for b in plan.buckets:
+        assert len({b.dtype}) == 1
+        # leaves within a bucket are in reverse-index (issue) order
+        assert list(b.leaves) == sorted(b.leaves, reverse=True)
+    dtypes = {b.dtype for b in plan.buckets}
+    assert dtypes == {"float32", "bfloat16"}
+    # mixed dtypes never share a bucket
+    for b in plan.buckets:
+        assert all(leaves[i].dtype == b.dtype for i in b.leaves)
+
+
+def test_bf16_budgeted_at_native_width_no_inflation():
+    """Regression (satellite 1): fusing bf16 by casting to f32 doubled
+    transported bytes; the planner must budget post-cast (native) bytes
+    and the fused bucket's transport must equal the native sum."""
+    leaves = tuple(_leaf(i, 1000, 2, "bfloat16") for i in range(8))
+    plan = bucketing.plan_buckets(leaves, 8, 16, bucket_bytes=16000)
+    fused = [b for b in plan.buckets if len(b.leaves) > 1]
+    assert fused
+    for b in fused:
+        assert b.transport_bytes == sum(1000 * 2 for _ in b.leaves)
+        assert b.nbytes == b.transport_bytes
+    # with the f32 inflation bug, 8 leaves x 4000 "cast" bytes would
+    # close the 16 kB bucket after 4 leaves; native-width budgeting
+    # packs all 8 (8 x 2000 = 16000)
+    assert max(len(b.leaves) for b in fused) == 8
+
+
+def test_int_leaves_never_fuse():
+    leaves = (
+        _leaf(0, 64, 4, "int32", fusible=False),
+        _leaf(1, 64),
+        _leaf(2, 64, 4, "int32", fusible=False),
+        _leaf(3, 64),
+    )
+    plan = bucketing.plan_buckets(leaves, 4, 4)
+    for b in plan.buckets:
+        if b.dtype == "int32":
+            assert len(b.leaves) == 1
+    float_buckets = [b for b in plan.buckets if b.dtype == "float32"]
+    assert {i for b in float_buckets for i in b.leaves} == {1, 3}
+
+
+def test_single_small_leaf_no_fusion():
+    plan = bucketing.plan_buckets((_leaf(0, 4),), 8, 16)
+    assert plan.num_buckets == 1
+    assert plan.buckets[0].leaves == (0,)
+    assert plan.buckets[0].algorithm == "nap"  # latency regime
+    assert plan.buckets[0].chunks == 1
+
+
+def test_fuse_disabled_gives_one_bucket_per_leaf():
+    leaves = tuple(_leaf(i, 128) for i in range(6))
+    plan = bucketing.plan_buckets(leaves, 4, 4, fuse=False)
+    assert plan.num_buckets == 6
+    assert all(len(b.leaves) == 1 for b in plan.buckets)
+
+
+def test_plan_is_cached():
+    leaves = tuple(_leaf(i, 512) for i in range(4))
+    a = bucketing.plan_buckets(leaves, 8, 16)
+    b = bucketing.plan_buckets(leaves, 8, 16)
+    assert a is b
+
+
+# ---------------------------------------------------------------------------
+# chunk alignment (tentpole geometry)
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_offsets_and_alignment_helpers():
+    assert napalg.chunk_offsets(10, 4) == (3, 6, 8)
+    assert napalg.chunk_offsets(8, 1) == ()
+    assert napalg.chunk_alignment((1000,) * 8, 4) == 1.0
+    assert napalg.chunk_alignment((1000,) * 7, 4) == 0.0
+    assert napalg.chunk_alignment((1000,) * 6, 4) == pytest.approx(1 / 3)
+    assert napalg.chunk_alignment((5, 5), 1) == 1.0
+
+
+def test_bucket_boundaries_snap_to_chunk_grid():
+    """With uniform leaves and a pinned depth, the planner must close the
+    bucket at a leaf count whose ragged chunk grid lands on leaf
+    boundaries (keep=4: boundaries at L, 2L, 3L) instead of the
+    byte-target close (keep=7: all three boundaries straddle leaves)."""
+    L = 1100
+    leaves = tuple(_leaf(i, L) for i in range(14))
+    plan = bucketing.plan_buckets(
+        leaves, 8, 16, bucket_bytes=30000, pipeline_chunks=4,
+        algorithm="mla_pipelined",
+    )
+    multi = [b for b in plan.buckets if len(b.leaves) > 1]
+    assert multi
+    for b in multi:
+        # the executed chunk splits ARE the ragged geometry
+        assert b.chunk_splits == napalg.ragged_splits(b.elems, b.chunks)
+        assert sum(b.chunk_splits) == b.elems
+    # the snap genuinely moved the close point off the pure byte target
+    # (7 leaves: alignment 0) to the aligned 4-leaf grid; the leftover
+    # tail bucket (too few leaves for the pinned depth) is exempt
+    snapped = [b for b in multi if len(b.leaves) == 4]
+    assert snapped
+    for b in snapped:
+        sizes = tuple(L for _ in b.leaves)
+        assert napalg.chunk_alignment(sizes, b.chunks) == 1.0
+
+
+def test_fused_bucket_internode_bytes_at_lower_bound():
+    """Acceptance: fused-bucket chunk boundaries coincide with the
+    ragged_splits geometry, so per-chip inter-node bytes of the replayed
+    schedule equal the uneven-block lower bound exactly."""
+    n, ppn = 16, 16
+    leaves = tuple(_leaf(i, 300_000 + 17 * i) for i in range(12))
+    plan = bucketing.plan_buckets(leaves, n, ppn, bucket_bytes=4 << 20)
+    checked = 0
+    for b in plan.buckets:
+        if b.algorithm not in ("mla", "mla_pipelined"):
+            continue
+        itemsize = b.transport_bytes / b.elems
+        sched = (
+            napalg.build_mla_pipelined_schedule(n, ppn, b.chunks, b.elems)
+            if b.chunks > 1
+            else napalg.build_mla_schedule(n, ppn, b.elems)
+        )
+        got = sched.max_internode_bytes_per_chip(float(b.transport_bytes))
+        want = napalg.mla_internode_lower_bound(n, ppn, b.elems) * itemsize
+        assert got == pytest.approx(want)
+        checked += 1
+    assert checked >= 2
+
+
+# ---------------------------------------------------------------------------
+# saturated crossover (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def test_crossover_saturation_returns_inf():
+    xo = pm.crossover_bytes(16, 16, SATURATED, large="mla")
+    assert math.isinf(xo)
+    # normal machines keep a finite, in-range crossover
+    assert 8.0 <= pm.crossover_bytes(16, 16, TPU, large="mla") <= 1 << 22
+
+
+def test_saturated_crossover_dispatch():
+    """inf must mean "latency regime everywhere": the dispatcher keeps
+    NAP at any payload size instead of flipping to MLA at a phantom
+    4 MiB switch point."""
+    from repro.core import collectives
+
+    assert math.isinf(collectives.auto_crossover_bytes(16, 16, SATURATED))
+    for nbytes in [64, 1 << 22, 1 << 28]:
+        assert (
+            collectives.select_algorithm(nbytes, 16, 16, SATURATED) == "nap"
+        )
+    # and the planner follows: every fusible bucket stays on NAP
+    leaves = tuple(_leaf(i, 1 << 20) for i in range(4))
+    plan = bucketing.plan_buckets(leaves, 16, 16, params=SATURATED)
+    assert math.isinf(plan.crossover_bytes)
+    assert all(b.algorithm == "nap" for b in plan.buckets)
+    # the fusion target must NOT be inf — bucket sizing is decoupled
+    assert math.isfinite(plan.target_bytes)
+
+
+# ---------------------------------------------------------------------------
+# compressed transport dtype (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_transport_dtype_narrowest_safe():
+    import jax.numpy as jnp
+
+    from repro.core.grad_sync import compressed_transport_dtype
+
+    assert compressed_transport_dtype(1, 8) == jnp.dtype(jnp.int8)
+    # group * qmax = 256 * 127 = 32512 <= 32767
+    assert compressed_transport_dtype(256, 8) == jnp.dtype(jnp.int16)
+    assert compressed_transport_dtype(257, 8) == jnp.dtype(jnp.int16)
+    # 1024 * 127 overflows int16
+    assert compressed_transport_dtype(1024, 8) == jnp.dtype(jnp.int32)
+    # byte accounting: int16 transport is half the f32 payload
+    assert compressed_transport_dtype(256, 8).itemsize * 2 == 4
+
+
+def test_planner_budgets_compressed_leaves_post_cast():
+    """A compressed f32 leaf moves 2-byte words (group <= 257), so the
+    planner must budget and dispatch it at half its raw bytes."""
+    tit = 2
+    elems = 30_000
+    raw = tuple(_leaf(i, elems) for i in range(2))
+    comp = tuple(_leaf(i, elems, tit=tit) for i in range(2))
+    xo = pm.crossover_bytes(8, 16, TPU, large="mla")
+    # sizes chosen so raw is above the crossover but compressed is below
+    assert elems * tit < xo < elems * 4
+    plan_raw = bucketing.plan_buckets(raw, 8, 16, fuse=False)
+    plan_comp = bucketing.plan_buckets(comp, 8, 16, fuse=False)
+    assert all(b.algorithm == "mla" for b in plan_raw.buckets)
+    assert all(b.algorithm == "nap" for b in plan_comp.buckets)
+    assert plan_comp.total_transport_bytes == 2 * elems * tit
+
+
+# ---------------------------------------------------------------------------
+# bucket-size optimum + compute-port replay (tentpole measurables)
+# ---------------------------------------------------------------------------
+
+
+def test_optimal_bucket_bytes_scales():
+    small = pm.optimal_bucket_bytes(1024.0, 16, 16, TPU)
+    assert small == 1024.0  # one bucket: nothing to overlap
+    total = float(256 << 20)
+    b = pm.optimal_bucket_bytes(total, 16, 16, TPU)
+    assert 0 < b < total  # large payloads genuinely split
+    k = total / b
+    assert 2 <= k <= 64
+
+
+def test_dispatched_cost_matches_regimes():
+    xo = pm.crossover_bytes(16, 16, TPU, large="mla")
+    s_small, s_big = xo / 4, xo * 64
+    assert pm.dispatched_allreduce_cost(s_small, 16, 16, TPU) == (
+        pm.cost_nap(s_small, 16, 16, TPU)
+    )
+    big = pm.dispatched_allreduce_cost(s_big, 16, 16, TPU)
+    assert big == pm.cost_mla_pipelined(s_big, 16, 16, TPU, chunks=None)
+    assert big <= pm.cost_nap(s_big, 16, 16, TPU)
+
+
+def test_async_bucketed_sync_beats_serial_16x16():
+    """Acceptance: on a 16x16 grid, the simulator's compute-port replay
+    of a multi-bucket plan shows async wall-clock <= serial wall-clock
+    (and strictly better when compute spread is comparable to comm)."""
+    n, ppn = 16, 16
+    leaves = tuple(
+        _leaf(2 * i, 2_000_000) for i in range(6)
+    ) + tuple(_leaf(2 * i + 1, 256) for i in range(6))
+    plan = bucketing.plan_buckets(leaves, n, ppn)
+    rows = plan.sim_rows()
+    assert len(rows) >= 2  # genuinely multi-bucket
+    t_flat = sim.simulate_bucketed_sync(rows, n, ppn, TPU)
+    spread = [(i + 1) * t_flat / len(rows) for i in range(len(rows))]
+    t_async = sim.simulate_bucketed_sync(
+        rows, n, ppn, TPU, compute_times=spread, overlap=True
+    )
+    t_serial = sim.simulate_bucketed_sync(
+        rows, n, ppn, TPU, compute_times=spread, overlap=False
+    )
+    assert t_async <= t_serial
+    assert t_async < t_serial * 0.95  # the overlap is real, not a tie
+    # zero compute spread: async degenerates to exactly the serial sum
+    t0 = sim.simulate_bucketed_sync(rows, n, ppn, TPU, overlap=True)
+    t1 = sim.simulate_bucketed_sync(rows, n, ppn, TPU, overlap=False)
+    assert t0 == pytest.approx(t1)
+
+
+def test_sim_rows_round_trip():
+    leaves = tuple(_leaf(i, 10_000) for i in range(3))
+    plan = bucketing.plan_buckets(leaves, 8, 16)
+    rows = plan.sim_rows()
+    assert len(rows) == plan.num_buckets
+    for (nb, algo, chunks, elems), b in zip(rows, plan.buckets):
+        assert nb == float(b.transport_bytes)
+        assert algo == b.algorithm
+        assert chunks == b.chunks
+        assert elems == b.elems
+
+
+def test_plan_for_tree_and_signature_validation():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import grad_sync
+
+    tree = {
+        "a": jax.ShapeDtypeStruct((64,), jnp.float32),
+        "b": jax.ShapeDtypeStruct((32,), jnp.bfloat16),
+    }
+    cfg = grad_sync.GradSyncConfig()
+    plan = grad_sync.plan_for_tree(tree, cfg=cfg, n=4, ppn=4)
+    assert sorted(_covered_indices(plan)) == [0, 1]
+    # a mismatched plan is rejected before any collective is issued
+    other = {"a": jnp.zeros((65,), jnp.float32), "b": jnp.zeros((32,), jnp.bfloat16)}
+    with pytest.raises(ValueError, match="bucket plan"):
+        grad_sync.sync_grads_local(
+            other, cfg=cfg, inter_axes=(), intra_axes=(), plan=plan
+        )
+
+
+def test_benchmark_payload_has_overlap_tables():
+    """The BENCH_3.json artifact must carry the overlap + byte tables."""
+    import benchmarks.gradsync as gs
+
+    csv_rows, table = gs.overlap_section(2, 16)
+    assert any("overlap_speedup" in name for name, _, _ in csv_rows)
+    assert table["serial_s"] >= table["async_s"]
+    mla_buckets = [
+        b for b in table["buckets"]
+        if b["algorithm"] in ("mla", "mla_pipelined")
+    ]
+    assert mla_buckets
+    for b in mla_buckets:
+        assert b["internode_bytes_per_chip"] == pytest.approx(
+            b["internode_lower_bound"]
+        )

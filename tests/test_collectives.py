@@ -73,6 +73,11 @@ _EXPECTED = [
     "grad_sync_compressed_dtypes",
     "grad_sync_mla_mean",
     "grad_sync_pipelined",
+    "grad_sync_bucketed_mixed_dtype",
+    "grad_sync_single_leaf",
+    "grad_sync_pinned_plan",
+    "grad_sync_compressed_int16",
+    "grad_sync_compressed_per_leaf_scale",
     "dp_train_nap_equals_psum",
     "nap_allgather",
     "nap_reduce_scatter",
