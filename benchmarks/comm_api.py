@@ -1,0 +1,190 @@
+"""Topology-first collective API report (BENCH_4.json).
+
+Three sections, all host-side (no devices needed):
+
+* **registry** — the engine registry listing: every registered engine
+  per collective family with its declared capabilities (ops, grid
+  constraints, regime) and whether it carries a cost model / schedule
+  builder — the extension surface a new engine or backend plugs into.
+* **dispatch tables** — the (engine, pipeline depth) decision of
+  ``comm.select_engine`` per collective across grids x payload sizes x
+  ops: the machine-readable form of the ROADMAP dispatch table,
+  including the new reduce_scatter / allgather rows.
+* **rs_ag_accounting** — per-chip inter-node bytes of the striped
+  reduce-scatter / allgather / allreduce schedules (event-replay
+  accounting) against the ragged uneven-block lower bounds, with an
+  equality flag per row — the acceptance criterion of the RS/AG
+  promotion, tracked per commit.
+
+Prints ``name,value,derived`` CSV; ``--json PATH`` writes the full
+payload — CI uploads it as ``BENCH_4.json`` next to the gradsync
+overlap artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core import comm, napalg, simulator as sim
+
+GRIDS = [(1, 16), (2, 16), (6, 1), (8, 16), (64, 16)]
+SIZES = [4, 2048, 1 << 16, 1 << 20, 16 << 20, 64 << 20]
+OPS = ["sum", "max"]
+RS_AG_ELEMS = [37, 1000, 1 << 16]
+ITEMSIZE = 4  # f32 accounting
+
+_BOUNDS = {
+    "mla": napalg.mla_internode_lower_bound,
+    "mla_rs": napalg.rs_internode_lower_bound,
+    "mla_ag": napalg.ag_internode_lower_bound,
+}
+
+
+def registry_section() -> dict:
+    return {
+        coll: [
+            spec.describe()
+            for spec in comm.registered_engines(coll).values()
+        ]
+        for coll in comm.COLLECTIVES
+    }
+
+
+def dispatch_section() -> dict:
+    tables: dict[str, list] = {c: [] for c in comm.COLLECTIVES}
+    for n, ppn in GRIDS:
+        topo = comm.Topology.of(n, ppn)
+        for coll in comm.COLLECTIVES:
+            for nbytes in SIZES:
+                for op in OPS if coll != "allgather" else ["sum"]:
+                    engine, chunks = comm.select_engine(
+                        topo, nbytes, op=op, collective=coll
+                    )
+                    tables[coll].append(
+                        {
+                            "n": n,
+                            "ppn": ppn,
+                            "nbytes": nbytes,
+                            "op": op,
+                            "engine": engine,
+                            "chunks": chunks,
+                        }
+                    )
+    return tables
+
+
+def rs_ag_section() -> tuple[list, list, int]:
+    """(csv rows, JSON rows, mismatch count) of byte accounting vs the
+    ragged lower bounds."""
+    csv_rows, json_rows, mismatches = [], [], 0
+    for n, ppn in GRIDS:
+        if n <= 1:
+            continue  # no slow domain: inter-node bytes are zero
+        topo = comm.Topology.of(n, ppn)
+        for elems in RS_AG_ELEMS:
+            s = float(elems * ITEMSIZE)
+            group_equal = True  # this (grid, elems) cell only
+            for engine, bound_fn in _BOUNDS.items():
+                sched = topo.schedule(engine, elems=elems)
+                got = sched.max_internode_bytes_per_chip(s)
+                bound = bound_fn(n, ppn, elems) * float(ITEMSIZE)
+                equal = math.isclose(got, bound, rel_tol=1e-9, abs_tol=1e-9)
+                mismatches += 0 if equal else 1
+                group_equal &= equal
+                json_rows.append(
+                    {
+                        "n": n,
+                        "ppn": ppn,
+                        "elems": elems,
+                        "engine": engine,
+                        "internode_bytes_per_chip": got,
+                        "ragged_lower_bound": bound,
+                        "equals_bound": equal,
+                    }
+                )
+            csv_rows.append(
+                (
+                    f"comm_rs_bytes_per_chip_pods{n}x{ppn}_e{elems}",
+                    topo.schedule("mla_rs", elems=elems)
+                    .max_internode_bytes_per_chip(s),
+                    "== ragged lower bound"
+                    if group_equal
+                    else "BOUND MISMATCH",
+                )
+            )
+    return csv_rows, json_rows, mismatches
+
+
+def collect() -> tuple[list, dict, int]:
+    registry = registry_section()
+    dispatch = dispatch_section()
+    rs_csv, rs_json, mismatches = rs_ag_section()
+
+    rows = [
+        (
+            f"comm_registered_engines_{coll}",
+            len(engines),
+            ",".join(e["name"] for e in engines),
+        )
+        for coll, engines in registry.items()
+    ]
+    # one replayed wall-clock per collective at a bandwidth-regime size,
+    # so the artifact tracks RS ~= AG ~= allreduce/2 per commit
+    topo = comm.Topology.of(8, 16)
+    elems = 1 << 16
+    s = float(elems * ITEMSIZE)
+    for engine in ("mla", "mla_rs", "mla_ag"):
+        rows.append(
+            (
+                f"comm_sim_us_{engine}_pods8x16",
+                sim.simulate_collective(topo, engine, s, elems=elems) * 1e6,
+                f"{elems} f32 elems",
+            )
+        )
+    rows.extend(rs_csv)
+    rows.append(
+        (
+            "comm_rs_ag_bound_mismatches",
+            mismatches,
+            "must be 0",
+        )
+    )
+    payload = {
+        "bench": "comm_api",
+        "machine": comm.Topology.of(1, 1).params.name,
+        "registry": registry,
+        "dispatch": dispatch,
+        "rs_ag_accounting": rs_json,
+        "rows": [
+            {"name": n, "value": v, "derived": d} for n, v, d in rows
+        ],
+    }
+    return rows, payload, mismatches
+
+
+def main(json_path: str | None = None) -> int:
+    rows, payload, mismatches = collect()
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+    if json_path:
+        out = Path(json_path)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(payload, indent=2))
+        print(f"# wrote {out}", file=sys.stderr)
+    return 0 if mismatches == 0 else 1
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    path = None
+    if "--json" in argv:
+        path = argv[argv.index("--json") + 1]
+    sys.exit(main(path))

@@ -26,6 +26,15 @@ the per-chip inter-node byte table against the uneven-block lower bound.
 ``--json PATH`` additionally writes the full result set (overlap + byte
 tables) as a JSON artifact — CI uploads it as ``BENCH_3.json`` so the
 perf trajectory is tracked per commit.
+
+``--fit [MEASUREMENTS.json]`` runs the :meth:`MachineParams.fit`
+calibration hook instead (ROADMAP open item: "measure the real
+crossover … and fit MachineParams"): given a JSON file of measured
+``[nbytes, seconds, active_per_node]`` rows from real hardware it
+emits the fitted machine constants — plus the NAP↔MLA crossovers the
+fit implies — as JSON on stdout.  Without a file it self-checks: it
+synthesises "measurements" from the reference machine model and
+verifies the fit recovers the constants that generated them.
 """
 
 from __future__ import annotations
@@ -266,6 +275,53 @@ def _json_safe(v):
     return v
 
 
+def _synthetic_measurements() -> list:
+    """Self-check rows: single-message step times straight from the
+    reference model, at k=1 (per-process regime) and k=ppn (injection
+    regime) — the fit must recover the generating constants."""
+    rows = []
+    for s in [256, 1024, 4096, 16384, 65536, 1 << 20, 4 << 20]:
+        rows.append([s, pm.maxrate_message_cost(float(s), P, 1), 1])
+        rows.append([s, pm.maxrate_message_cost(float(s), P, 16), 16])
+    return rows
+
+
+def fit_main(measurements_path: str | None) -> int:
+    """``--fit`` hook: calibrate MachineParams, emit them as JSON."""
+    import dataclasses
+
+    if measurements_path:
+        rows = json.loads(Path(measurements_path).read_text())
+        source = measurements_path
+    else:
+        rows = _synthetic_measurements()
+        source = f"synthetic({P.name})"
+    fitted = pm.MachineParams.fit(rows, base=P, name="fitted")
+    payload = {
+        "bench": "gradsync_fit",
+        "source": source,
+        "n_measurements": len(rows),
+        "fitted": dataclasses.asdict(fitted),
+        "implied_crossover_bytes": {
+            f"pods{n}x{ppn}": _json_safe(
+                pm.crossover_bytes(n, ppn, fitted, large="mla")
+            )
+            for n, ppn in [(2, 16), (8, 16), (64, 16)]
+        },
+    }
+    ok = 0
+    if not measurements_path:
+        # roundtrip self-check: fitted constants vs the generator's
+        rel = {
+            k: abs(getattr(fitted, k) - getattr(P, k)) / getattr(P, k)
+            for k in ("alpha", "R_b", "R_N")
+        }
+        payload["recovery_relative_error"] = rel
+        ok = 0 if all(v < 0.01 for v in rel.values()) else 1
+    print(json.dumps(payload, indent=2))
+    return ok
+
+
 def main(json_path: str | None = None) -> None:
     rows, payload = collect()
     for name, us, derived in rows:
@@ -279,6 +335,10 @@ def main(json_path: str | None = None) -> None:
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
+    if "--fit" in argv:
+        i = argv.index("--fit")
+        arg = argv[i + 1] if i + 1 < len(argv) else None
+        sys.exit(fit_main(arg if arg and not arg.startswith("--") else None))
     path = None
     if "--json" in argv:
         path = argv[argv.index("--json") + 1]

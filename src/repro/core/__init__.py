@@ -1,4 +1,13 @@
-from . import collectives, extensions, grad_sync, napalg, perf_model, simulator
+from . import (
+    bucketing,
+    collectives,
+    comm,
+    extensions,
+    grad_sync,
+    napalg,
+    perf_model,
+    simulator,
+)
 from .collectives import (
     hierarchical_allreduce,
     nap_allreduce,
@@ -6,11 +15,17 @@ from .collectives import (
     ring_allreduce,
     smp_allreduce,
 )
+from .comm import CommContext, CommPolicy, Topology
 from .napalg import build_nap_schedule, nap_num_steps
 
 __all__ = [
+    "CommContext",
+    "CommPolicy",
+    "Topology",
+    "bucketing",
     "build_nap_schedule",
     "collectives",
+    "comm",
     "extensions",
     "grad_sync",
     "hierarchical_allreduce",

@@ -48,7 +48,6 @@ Planning rules:
 from __future__ import annotations
 
 import functools
-import math
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -184,55 +183,44 @@ def leaf_specs_for(
 
 def _decide(
     transport_bytes: int,
-    n: int,
-    ppn: int,
+    topology,
     algorithm: str,
     op: str,
     small_threshold_bytes: int | None,
     pipeline_chunks: int | None,
-    params,
 ) -> tuple[str, int]:
-    """(algorithm, pipeline depth) for one bucket — the single dispatch
-    decision, made at plan time with the same logic the trace-time
-    dispatcher would apply."""
-    from . import perf_model as pm
-
-    mp = params or pm.TPU_V5E_POD
-
-    def depth() -> int:
-        if pipeline_chunks is not None:
-            return max(1, int(pipeline_chunks))
-        return pm.optimal_pipeline_chunks(float(transport_bytes), n, ppn, mp)
+    """(engine, pipeline depth) for one bucket — the single dispatch
+    decision, made at plan time through the engine registry
+    (:func:`repro.core.comm.select_engine`), so the planner and the
+    trace-time dispatcher cannot diverge."""
+    from . import comm
 
     if algorithm != "auto":
-        if algorithm == "mla_pipelined":
-            return algorithm, depth()
-        if algorithm == "mla" and pipeline_chunks is not None:
+        spec = comm.get_engine(algorithm)  # validates: listing on typos
+        if spec.chunked:
+            if pipeline_chunks is not None:
+                return algorithm, max(1, int(pipeline_chunks))
+            return algorithm, topology.optimal_pipeline_chunks(
+                float(transport_bytes)
+            )
+        if spec.pipelined_variant is not None and pipeline_chunks is not None:
             return algorithm, max(1, int(pipeline_chunks))
         return algorithm, 1
-    from .collectives import select_algorithm
-
-    algo = select_algorithm(
-        int(transport_bytes),
-        n,
-        ppn,
-        params,
-        op=op,
-        small_threshold_bytes=small_threshold_bytes,
+    return tuple(
+        comm.select_engine(
+            topology,
+            int(transport_bytes),
+            op=op,
+            small_threshold_bytes=small_threshold_bytes,
+            pipeline_chunks=pipeline_chunks,
+        )
     )
-    if algo == "mla_pipelined":
-        return algo, depth()
-    if algo == "mla" and pipeline_chunks is not None:
-        c = max(1, int(pipeline_chunks))
-        return ("mla_pipelined" if c > 1 else "mla"), c
-    return algo, 1
 
 
-@functools.lru_cache(maxsize=None)
 def plan_buckets(
     leaf_specs: tuple[LeafSpec, ...],
-    n: int,
-    ppn: int,
+    topology,
+    ppn: int | None = None,
     *,
     algorithm: str = "auto",
     op: str = "sum",
@@ -244,34 +232,62 @@ def plan_buckets(
 ) -> BucketPlan:
     """Pack leaves into size-targeted, dtype-pure, chunk-aligned buckets.
 
-    Pure in its (hashable) inputs and cached — planning runs once per
-    (pytree structure x grid x config), off the trace path.  Buckets come
-    back in reverse-leaf issue order; every leaf appears in exactly one
-    bucket.
+    ``topology`` is a :class:`repro.core.comm.Topology` (preferred) or a
+    legacy ``n`` node count with ``ppn`` as the third argument; ``params``
+    overrides the topology's machine constants.  Pure in its (hashable)
+    inputs and cached — planning runs once per (pytree structure x
+    topology x config), off the trace path.  Buckets come back in
+    reverse-leaf issue order; every leaf appears in exactly one bucket.
     """
-    from . import perf_model as pm
+    import dataclasses as _dc
 
-    mp = params or pm.TPU_V5E_POD
+    from . import comm
+
+    if isinstance(topology, comm.Topology):
+        topo = topology
+        if params is not None:
+            topo = _dc.replace(topo, params=params)
+    else:
+        topo = comm.Topology.of(int(topology), int(ppn or 1), params=params)
+    return _plan_buckets_cached(
+        leaf_specs,
+        topo,
+        algorithm,
+        op,
+        small_threshold_bytes,
+        pipeline_chunks,
+        bucket_bytes,
+        fuse,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_buckets_cached(
+    leaf_specs: tuple[LeafSpec, ...],
+    topo,
+    algorithm: str,
+    op: str,
+    small_threshold_bytes: int | None,
+    pipeline_chunks: int | None,
+    bucket_bytes: int | None,
+    fuse: bool,
+) -> BucketPlan:
+    n, ppn = topo.n_nodes, topo.ppn
     total_fusible = sum(
         ls.transport_bytes for ls in leaf_specs if ls.fusible
     )
     if bucket_bytes is not None:
         target = float(bucket_bytes)
     else:
-        target = pm.optimal_bucket_bytes(
-            float(max(total_fusible, 1)), n, ppn, mp
-        )
-    if n > 1 and ppn > 1:
-        xo = pm.crossover_bytes(n, ppn, mp, large="mla")
-    else:
-        xo = math.inf if n <= 1 else 0.0
+        target = topo.optimal_bucket_bytes(float(max(total_fusible, 1)))
+    xo = topo.crossover_bytes()
 
     buckets: list[Bucket] = []
 
     def decide(tbytes: int) -> tuple[str, int]:
         return _decide(
-            tbytes, n, ppn, algorithm, op,
-            small_threshold_bytes, pipeline_chunks, params,
+            tbytes, topo, algorithm, op,
+            small_threshold_bytes, pipeline_chunks,
         )
 
     def close(run: list[LeafSpec]) -> None:

@@ -64,6 +64,10 @@ __all__ = [
     "rabenseifner_allreduce",
     "mla_allreduce",
     "mla_pipelined_allreduce",
+    "mla_reduce_scatter",
+    "mla_allgather",
+    "flat_reduce_scatter",
+    "flat_allgather",
     "hierarchical_allreduce",
     "select_algorithm",
     "auto_crossover_bytes",
@@ -520,7 +524,128 @@ def mla_pipelined_allreduce(
 
 
 # ---------------------------------------------------------------------------
-# dispatcher
+# reduce-scatter / allgather — first-class striped collectives
+# ---------------------------------------------------------------------------
+
+
+def _level_reduce_scatter(flat: jax.Array, axes, k: int, op: str) -> jax.Array:
+    """One reduce-scatter level: pad to ``k``, scatter tile ``i`` to the
+    rank of index ``i`` along ``axes`` (psum_scatter for sum, all_to_all
+    + fold for max/min — same byte transport)."""
+    if k <= 1:
+        return flat
+    pad = (-flat.size) % k
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.full((pad,), _op_identity(op, flat.dtype))]
+        )
+    tiles = flat.reshape(k, -1)
+    if op == "sum":
+        return lax.psum_scatter(tiles, axes, scatter_dimension=0, tiled=False)
+    gathered = lax.all_to_all(
+        tiles[:, None, :], axes, split_axis=0, concat_axis=1, tiled=False
+    )
+    return _AXIS_REDUCERS[op](gathered[0], axis=0)
+
+
+def mla_reduce_scatter(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames,
+    op: str = "sum",
+) -> jax.Array:
+    """Node-aware striped reduce-scatter — the RS half of the MLA
+    allreduce, promoted to a public collective.
+
+    Two levels: the pod partial is striped across the ``ppn`` local
+    lanes (intra reduce-scatter), then every lane reduce-scatters its
+    stripe over the slow domain — chip ``(node j, lane r)`` ends up
+    owning the fully reduced block ``(r, j)`` of the MLA stripe layout
+    (:func:`napalg.mla_stripe_geometry`, uniform-padded for SPMD shape
+    agreement like the MLA lowering).  Per-chip inter-node bytes are
+    half the allreduce round trip — the ZeRO-style sharded-optimizer
+    sync primitive.  Inverse: :func:`mla_allgather`.
+    """
+    if op not in _MLA_OPS:
+        raise NotImplementedError(
+            f"mla_reduce_scatter supports {sorted(_MLA_OPS)}, got {op!r}"
+        )
+    inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+    ppn = int(np.prod([compat.axis_size(ax) for ax in intra])) if intra else 1
+    n = int(np.prod([compat.axis_size(ax) for ax in inter])) if inter else 1
+    flat = x.reshape(-1)
+    stripe = _level_reduce_scatter(flat, intra, ppn, op)
+    return _level_reduce_scatter(stripe, inter, n, op)
+
+
+def mla_allgather(
+    x: jax.Array,
+    *,
+    inter_axes: AxisNames,
+    intra_axes: AxisNames,
+    elems: int | None = None,
+) -> jax.Array:
+    """Node-aware striped allgather — the AG half of the MLA allreduce.
+
+    Exact inverse of :func:`mla_reduce_scatter` on the same topology:
+    every lane allgathers its blocks over the slow domain (rebuilding
+    its stripe), then an intra-pod allgather rebuilds the flat payload.
+    ``elems`` is the original payload size, needed to strip the
+    uniform-shape padding (default: assume no padding was required).
+    """
+    inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
+    ppn = int(np.prod([compat.axis_size(ax) for ax in intra])) if intra else 1
+    n = int(np.prod([compat.axis_size(ax) for ax in inter])) if inter else 1
+    shard = x.reshape(-1)
+    if elems is None:
+        elems = shard.size * n * ppn
+    stripe_len = -(-int(elems) // ppn)  # ceil: the intra-RS stripe size
+    if n > 1:
+        stripe = lax.all_gather(shard, inter, axis=0, tiled=False).reshape(-1)
+        stripe = stripe[:stripe_len]
+    else:
+        stripe = shard[:stripe_len]
+    if ppn > 1:
+        full = lax.all_gather(stripe, intra, axis=0, tiled=False).reshape(-1)
+    else:
+        full = stripe
+    return full[: int(elems)]
+
+
+def flat_reduce_scatter(
+    x: jax.Array, *, axes: AxisNames, op: str = "sum"
+) -> jax.Array:
+    """Single-level (node-agnostic) reduce-scatter over the flattened
+    ``axes`` grid — the fallback engine when there is no slow domain."""
+    if op not in _MLA_OPS:
+        raise NotImplementedError(
+            f"flat_reduce_scatter supports {sorted(_MLA_OPS)}, got {op!r}"
+        )
+    ax = _as_tuple(axes)
+    p = int(np.prod([compat.axis_size(a) for a in ax])) if ax else 1
+    return _level_reduce_scatter(x.reshape(-1), ax, p, op)
+
+
+def flat_allgather(
+    x: jax.Array, *, axes: AxisNames, elems: int | None = None
+) -> jax.Array:
+    """Single-level allgather over the flattened ``axes`` grid — inverse
+    of :func:`flat_reduce_scatter` (chip-order tile layout)."""
+    ax = _as_tuple(axes)
+    p = int(np.prod([compat.axis_size(a) for a in ax])) if ax else 1
+    shard = x.reshape(-1)
+    if p <= 1:
+        out = shard
+    else:
+        out = lax.all_gather(shard, ax, axis=0, tiled=False).reshape(-1)
+    if elems is None:
+        elems = shard.size * p
+    return out[: int(elems)]
+
+
+# ---------------------------------------------------------------------------
+# dispatcher — thin delegates over the engine registry (repro.core.comm)
 # ---------------------------------------------------------------------------
 
 
@@ -529,44 +654,36 @@ def _psum_allreduce(x, *, inter_axes, intra_axes=(), op="sum", **_):
     return named_reduce(x, _as_tuple(inter_axes) + _as_tuple(intra_axes))
 
 
-ALGORITHMS: dict[str, Callable] = {
-    "nap": nap_allreduce,
-    "rd": rd_allreduce,
-    "smp": smp_allreduce,
-    "mla": mla_allreduce,
-    "mla_pipelined": mla_pipelined_allreduce,
-    "psum": _psum_allreduce,
-}
+def __getattr__(name: str):
+    # ``ALGORITHMS`` is a *view* of the engine registry now — the
+    # registry (repro.core.comm) is the single source of truth, and this
+    # legacy alias stays importable for existing callers.
+    if name == "ALGORITHMS":
+        from . import comm
+
+        return comm.legacy_execute_table()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @functools.lru_cache(maxsize=None)
 def auto_crossover_bytes(n: int, ppn: int, params=None) -> float:
     """Model-driven NAP↔MLA crossover for an (n, ppn) grid (cached).
 
-    Replaces the old hardcoded 2048-byte switch: the crossover is solved
-    from the §IV max-rate cost model (``perf_model.crossover_bytes`` with
-    the MLA cost as the large-message contender) for the actual grid shape
-    and machine constants.
+    Legacy alias of :meth:`repro.core.comm.Topology.crossover_bytes` —
+    solved from the §IV max-rate cost model for the actual grid shape
+    and machine constants, never a hardcoded byte count.
 
     Returns ``math.inf`` when NAP never loses within the model's search
     range (saturated crossover — machines whose alpha bill dwarfs the
     bandwidth term).  Callers must treat infinity as "latency regime for
-    every payload", not clamp it to a byte count: ``select_algorithm``
-    then routes everything to NAP, and the grad-sync planner keeps its
+    every payload", not clamp it to a byte count: the dispatch then
+    routes everything to NAP, and the grad-sync planner keeps its
     *fusion* bucket target on the separate
     :func:`perf_model.optimal_bucket_bytes` optimum, which stays finite.
     """
-    from . import perf_model as pm
+    from . import comm
 
-    if params is None:
-        params = pm.TPU_V5E_POD
-    if n <= 1:
-        return float("inf")  # no slow domain: NAP degenerates to psum
-    if ppn <= 1:
-        # NAP needs ppn >= 2 to trade steps for lanes; MLA degenerates to
-        # plain RS+AG over the slow domain, which is always valid here.
-        return 0.0
-    return pm.crossover_bytes(n, ppn, params, large="mla")
+    return comm.Topology.of(n, ppn, params=params).crossover_bytes()
 
 
 def select_algorithm(
@@ -579,45 +696,33 @@ def select_algorithm(
 ) -> str:
     """The op-safe three-regime dispatch decision (host-side, static).
 
+    Legacy wrapper over :func:`repro.core.comm.select_engine` — the
+    capability-filtered cost tournament over the registered engines:
+
     * no slow domain (``n <= 1``) — "psum": single-level native reduce;
     * ``ppn == 1`` — "mla" (degenerates to RS+AG over the slow domain):
       NAP needs ``ppn >= 2`` to trade steps for lanes, in *both*
       threshold modes;
     * ``nbytes`` at or below the crossover — "nap": latency regime,
       ``log_ppn(n)`` inter-node steps;
-    * above it — the bandwidth regime, itself a model contest:
-      "mla_pipelined" when :func:`perf_model.optimal_pipeline_chunks`
-      says chunk-level intra/inter overlap pays for its extra alpha
-      steps, plain "mla" otherwise.
+    * above it — the bandwidth tournament: "mla_pipelined" when chunked
+      intra/inter overlap strictly beats plain MLA under the declared
+      cost models, plain "mla" otherwise.
 
-    ``op`` guards the decision: the striped engines only run ops in
-    ``_MLA_OPS`` (sum/max/min, with dtype-aware identities); any other
-    registered op stays on NAP, which folds with the op directly —
-    dispatch can no longer route a payload to an engine that would raise
+    ``op`` guards the decision through the engines' declared capability
+    sets — dispatch cannot route a payload to an engine that would raise
     at trace time.  ``small_threshold_bytes`` overrides the modeled
     crossover with a fixed byte threshold; the degenerate-grid fallbacks
     above apply identically.
     """
-    if n <= 1:
-        return "psum"
-    if op not in _MLA_OPS:
-        # op unsupported by the striped engines: NAP handles every
-        # registered op (ppn == 1 has no NAP; fall back to single psum
-        # over the joint grid, which is always op-correct)
-        return "nap" if ppn > 1 else "psum"
-    threshold = (
-        float(small_threshold_bytes)
-        if small_threshold_bytes is not None
-        else auto_crossover_bytes(n, ppn, params)
-    )
-    if ppn > 1 and nbytes <= threshold:
-        return "nap"
-    from . import perf_model as pm
+    from . import comm
 
-    chunks = pm.optimal_pipeline_chunks(
-        float(nbytes), n, ppn, params or pm.TPU_V5E_POD
-    )
-    return "mla_pipelined" if chunks > 1 else "mla"
+    return comm.select_engine(
+        comm.Topology.of(n, ppn, params=params),
+        int(nbytes),
+        op=op,
+        small_threshold_bytes=small_threshold_bytes,
+    ).engine
 
 
 def hierarchical_allreduce(
@@ -632,49 +737,31 @@ def hierarchical_allreduce(
 ) -> jax.Array:
     """Allreduce over a two-level hierarchy with a model-driven switch.
 
-    ``algorithm="auto"`` consults :func:`select_algorithm`: NAP below the
-    :func:`perf_model.crossover_bytes` NAP↔MLA crossover for this grid
-    (the paper measured ~2 KiB on Blue Waters at 32 768 processes), the
-    striped multi-lane MLA path above it — chunk-pipelined when
-    :func:`perf_model.optimal_pipeline_chunks` says the payload amortises
-    the extra latency steps — and plain psum when there is no slow
-    domain.  The dispatch is op-aware: max/min run the striped engines
-    with dtype-correct identities, anything else stays on NAP.
+    .. deprecated::
+        Thin shim over the topology-first API: builds a
+        :class:`repro.core.comm.Topology` from the axis names and a
+        default policy, then calls
+        :meth:`repro.core.comm.CommContext.allreduce`.  Warns once.
 
-    Pass ``small_threshold_bytes`` to override the modeled crossover with
-    a fixed byte threshold; degenerate grids (``n <= 1`` → psum,
-    ``ppn == 1`` → RS+AG) fall back identically in both threshold modes.
-    ``pipeline_chunks`` pins the MLA pipeline depth (None = model-driven
-    for the pipelined path, unpipelined otherwise).
+    ``algorithm="auto"`` runs the engine-registry dispatch (NAP below
+    the modeled NAP↔MLA crossover, the striped multi-lane MLA path above
+    it — chunk-pipelined when the cost tournament says the payload
+    amortises the extra latency steps — plain psum when there is no slow
+    domain), op-aware through the engines' declared capability sets.
+    ``small_threshold_bytes`` overrides the modeled crossover;
+    ``pipeline_chunks`` pins the MLA pipeline depth.
     """
-    if algorithm == "auto":
-        nbytes = int(np.prod(x.shape)) * x.dtype.itemsize
-        inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
-        n = int(np.prod([compat.axis_size(ax) for ax in inter]))
-        ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
-        algorithm = select_algorithm(
-            nbytes, n, ppn, op=op,
+    from . import comm
+
+    comm.warn_deprecated_once(
+        "collectives.hierarchical_allreduce", "CommContext.allreduce"
+    )
+    ctx = comm.CommContext(
+        comm.Topology.from_axes(inter_axes, intra_axes),
+        comm.CommPolicy(
+            algorithm=algorithm,
             small_threshold_bytes=small_threshold_bytes,
-        )
-    if algorithm == "ring":
-        return ring_allreduce(
-            x, axes=_as_tuple(inter_axes) + _as_tuple(intra_axes), op=op
-        )
-    if algorithm == "rabenseifner":
-        # SMP-style large-message baseline: reduce inside the pod first so
-        # a single de-duplicated payload crosses the slow domain, then
-        # RS+AG over the inter axes.  Kept for comparison; the MLA path
-        # stripes the same traffic across all ppn lanes instead.
-        _, named_reduce, _ = _OPS[op]
-        local = named_reduce(x, _as_tuple(intra_axes))
-        return rabenseifner_allreduce(local, axes=inter_axes, op=op)
-    fn = ALGORITHMS[algorithm]
-    if algorithm in ("mla", "mla_pipelined") and pipeline_chunks is not None:
-        return fn(
-            x,
-            inter_axes=inter_axes,
-            intra_axes=intra_axes,
-            op=op,
             pipeline_chunks=pipeline_chunks,
-        )
-    return fn(x, inter_axes=inter_axes, intra_axes=intra_axes, op=op)
+        ),
+    )
+    return ctx.allreduce(x, op=op)

@@ -1,50 +1,43 @@
-"""Gradient synchronisation: bucket-scheduled allreduce of a pytree.
+"""Gradient synchronisation: bucket-scheduled collectives of a pytree.
 
-Two call styles:
+Since PR 4 this module is the *executor* half of the grad-sync subsystem,
+driven by the topology-first API (:mod:`repro.core.comm`):
 
-* :func:`sync_grads_local` — used *inside* an existing ``jax.shard_map``
-  (the trainer's explicit-collectives path).  Takes per-chip local
-  gradients, returns synchronised gradients.
-* :func:`make_grad_sync` — standalone: wraps ``sync_grads_local`` in its
-  own ``shard_map`` given the gradient PartitionSpecs (tests, benchmarks).
-
-Since PR 3 grad_sync is a *bucket scheduler subsystem*, not a loop over
-leaves:
-
+* the **context** (:class:`comm.CommContext` = :class:`comm.Topology` +
+  :class:`comm.CommPolicy`) owns the grid shape, the machine model and
+  the dispatch policy — no ``(inter_axes, intra_axes, n, ppn, params)``
+  keyword soup;
 * the **planner** (:func:`repro.core.bucketing.plan_buckets`) packs
   leaves into size-targeted, dtype-pure buckets whose size optimum comes
-  from :func:`perf_model.optimal_bucket_bytes` and whose boundaries are
-  snapped to the ragged pipeline-chunk grid
-  (:func:`napalg.ragged_splits`) — so a fused bucket's MLA chunks align
-  with leaf boundaries and per-chip inter-node bytes stay at the
-  uneven-block lower bound;
-* the **executor** (this module) issues buckets in reverse-leaf order —
-  the order backward produces gradients — with each bucket's algorithm
-  and pipeline depth pinned by the planner.  The buckets carry no data
-  dependencies on each other, so inside SPMD the interleaved issue order
-  feeds XLA's latency-hiding scheduler independent collectives it can
-  overlap with remaining backward compute (bucket-level async);
+  from :meth:`comm.Topology.optimal_bucket_bytes` and whose boundaries
+  are snapped to the ragged pipeline-chunk grid;
+* the **executor** (this module) issues buckets in reverse-leaf order
+  with each bucket's engine and pipeline depth pinned by the planner —
+  inside SPMD the interleaved issue order feeds XLA's latency-hiding
+  scheduler independent collectives (bucket-level async);
 * the **simulator** (:func:`repro.core.simulator.simulate_bucketed_sync`)
-  replays the same plan with a compute port, so the overlap win is
-  measurable as wall-clock.
+  replays the same plan with a compute port.
 
-Dispatch per bucket is the model-driven three-regime switch: NAP below
-the modeled NAP↔MLA crossover (``perf_model.crossover_bytes`` for the
-actual grid; ``math.inf`` when NAP never loses — the saturated case),
-striped MLA above it, chunk-pipelined once
-``perf_model.optimal_pipeline_chunks`` says the bucket amortises the
-extra latency steps, plain psum when there is no slow domain.
+Two sync routes:
+
+* :func:`CommContext.sync_grads` / :func:`sync_grads_local` — replicated
+  allreduce sync (every chip gets the full averaged gradients);
+* :func:`sync_grads_sharded` — ZeRO-style sharded sync: each leaf is
+  reduce-scattered and every chip keeps only its 1-D shard (its
+  optimizer partition's slice), halving per-chip inter-node bytes;
+  :func:`unshard_grads` allgathers back when needed.
 
 Optional *int8 gradient compression* quantises float leaves with
 NAP-pmax-agreed max-abs scales — **per leaf**, even inside a fused
-bucket (the per-leaf absmaxes travel as one fused small-vector
-max-allreduce, so a layer-norm grad fused next to an embedding grad
-keeps its own scale instead of being rounded to zero) — and transports
-the sums in the **narrowest integer dtype that cannot overflow**
-(``int16`` up to 257-way groups — half the bytes of the f32 payload, a
-quarter of the old int32 transport); the planner budgets compressed
-leaves at their post-cast width so the regime decision sees the bytes
-that actually move.
+bucket — and transports the sums in the **narrowest integer dtype that
+cannot overflow** (:func:`compressed_transport_dtype`; int16 up to
+257-way groups).  The planner budgets compressed leaves at their
+post-cast width so the regime decision sees the bytes that actually
+move.
+
+:class:`GradSyncConfig` is kept as a deprecated alias of
+:class:`comm.CommPolicy` (warns once): it still works everywhere, but
+new code should build a ``Topology`` + ``CommContext`` instead.
 """
 
 from __future__ import annotations
@@ -58,12 +51,15 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from . import bucketing, collectives
+from . import bucketing, collectives, comm
 from .. import compat
 
 __all__ = [
     "GradSyncConfig",
     "sync_grads_local",
+    "sync_with_context",
+    "sync_grads_sharded",
+    "unshard_grads",
     "make_grad_sync",
     "plan_for_tree",
     "compressed_transport_dtype",
@@ -71,49 +67,45 @@ __all__ = [
 
 
 @dataclasses.dataclass(frozen=True)
-class GradSyncConfig:
-    """Configuration of the gradient allreduce.
+class GradSyncConfig(comm.CommPolicy):
+    """Deprecated alias of :class:`repro.core.comm.CommPolicy`.
 
-    algorithm: "nap" | "rd" | "smp" | "mla" | "psum" | "ring" |
-      "rabenseifner" | "auto" (model-driven three-regime switch).
+    .. deprecated::
+        Thin shim kept for existing callers — constructing one warns
+        once and behaves exactly like a ``CommPolicy``; the sync entry
+        points build a :class:`comm.Topology` + :class:`comm.CommContext`
+        from it internally.  New code: ``CommContext(topology,
+        CommPolicy(...)).sync_grads(grads)``.
+
+    algorithm: "auto" (model-driven dispatch) or a registered allreduce
+      engine — "nap" | "rd" | "smp" | "mla" | "mla_pipelined" | "psum" |
+      "ring" | "rabenseifner".  Validated at construction: a typo raises
+      immediately with the list of registered engines instead of a bare
+      ``KeyError`` deep inside tracing.
     mean: divide by the DP group size (data-parallel averaging).  Applies
       to *every* leaf: integer gradients are averaged in float32 and
       rounded back to their dtype rather than silently left as sums.
-    compress_bits: None (off) or 8 — quantised transport with a shared
-      max-abs scale (float leaves only), summed in the narrowest safe
-      integer dtype (:func:`compressed_transport_dtype`).
+    compress_bits: None (off) or 8 — quantised transport with per-leaf
+      max-abs scales, summed in the narrowest safe integer dtype
+      (:func:`compressed_transport_dtype`).
     small_threshold_bytes: NAP↔MLA dispatch crossover override.  ``None``
-      (default) derives it from the §IV cost model
-      (:func:`collectives.auto_crossover_bytes`) for the actual grid —
+      (default) derives it from the §IV cost model for the actual grid —
       possibly ``inf`` when NAP never loses (saturated crossover).
     fuse_small_buckets: let the planner fuse same-dtype float leaves into
       shared buckets (False = one bucket per leaf).
     bucket_bytes: fusion bucket size target.  ``None`` (default) takes
-      the overlap optimum from :func:`perf_model.optimal_bucket_bytes`;
+      the overlap optimum from :meth:`comm.Topology.optimal_bucket_bytes`;
       an int pins it.
     pipeline_chunks: MLA pipeline depth for bandwidth-regime buckets.
-      ``None`` (default) lets the model pick per bucket
-      (:func:`perf_model.optimal_pipeline_chunks`); an int pins the
-      depth.
+      ``None`` (default) lets the model pick per bucket; an int pins it.
     """
 
-    algorithm: str = "auto"
-    mean: bool = True
-    compress_bits: int | None = None
-    small_threshold_bytes: int | None = None
-    fuse_small_buckets: bool = True
-    bucket_bytes: int | None = None
-    pipeline_chunks: int | None = None
-
-
-# NOTE: the old ``_resolved_threshold`` helper (whose ``isfinite`` guard
-# silently accepted ``crossover_bytes``'s former behaviour of returning
-# its 4 MiB search cap) is gone with its only caller: the dispatch
-# threshold now flows through ``bucketing.plan_buckets`` into
-# ``collectives.select_algorithm``, where a saturated (``math.inf``)
-# crossover correctly means "latency regime for every payload", and the
-# *fusion* bucket target is the separate, always-finite
-# :func:`perf_model.optimal_bucket_bytes` optimum.
+    def __post_init__(self):
+        comm.warn_deprecated_once(
+            "grad_sync.GradSyncConfig",
+            "comm.CommPolicy with comm.CommContext",
+        )
+        super().__post_init__()
 
 
 def compressed_transport_dtype(group: int, bits: int) -> jnp.dtype:
@@ -124,43 +116,76 @@ def compressed_transport_dtype(group: int, bits: int) -> jnp.dtype:
     the reduced sum is bounded by ``group * qmax``: int8 suffices only
     for a single rank, int16 up to 257-way groups (257 * 127 = 32639),
     int32 beyond.  Transporting int16 instead of the old int32 halves
-    the bytes the "compressed" path actually moves — with int32 an
-    8-bit-quantised f32 payload shipped exactly as many bytes as the
-    uncompressed one.
+    the bytes the "compressed" path actually moves.
+
+    Groups too large even for int32 (> ~16.9M ranks at 8 bits) would
+    need int64 — which jax silently degrades to int32 when x64 is
+    disabled (the default), re-introducing the exact overflow this
+    function exists to prevent.  That case raises ``OverflowError``
+    instead of returning a dtype the runtime won't honor; chunk the
+    reduction (hierarchical partial sums) or enable ``jax_enable_x64``.
     """
     qmax = 2 ** (bits - 1) - 1
     peak = max(1, int(group)) * qmax
     for dt in (jnp.int8, jnp.int16, jnp.int32):
         if peak <= jnp.iinfo(dt).max:
             return jnp.dtype(dt)
+    if not jax.config.jax_enable_x64:
+        raise OverflowError(
+            f"a {group}-way sum of {bits}-bit quantised values overflows "
+            "int32, and jax x64 is disabled so an int64 transport would "
+            "silently degrade to int32 — re-introducing the overflow. "
+            "Chunk the reduction into sub-groups or enable "
+            "jax.config.jax_enable_x64."
+        )
     return jnp.dtype(jnp.int64)
 
 
-def _one_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes):
-    if not inter_axes:
+# ---------------------------------------------------------------------------
+# per-payload reduction primitives (context-driven)
+# ---------------------------------------------------------------------------
+
+
+def _one_allreduce(x, ctx: comm.CommContext):
+    topo = ctx.topology
+    if not topo.inter_axes:
         # single-level mesh: no slow domain; plain psum over the DP axes.
-        return lax.psum(x, intra_axes)
-    return collectives.hierarchical_allreduce(
-        x,
-        inter_axes=inter_axes,
-        intra_axes=intra_axes,
-        algorithm=cfg.algorithm,
-        small_threshold_bytes=cfg.small_threshold_bytes,
-        pipeline_chunks=cfg.pipeline_chunks,
+        return lax.psum(x, topo.intra_axes)
+    return ctx.allreduce(x)
+
+
+def _agreed_absmax(parts, ctx: comm.CommContext):
+    """Per-part max-abs scales agreed across the group in ONE fused
+    small-vector max-allreduce (the paper's canonical latency-bound
+    workload) — never one collective per leaf."""
+    topo = ctx.topology
+    absmax = jnp.stack(
+        [jnp.max(jnp.abs(p)).astype(jnp.float32) for p in parts]
     )
+    if topo.inter_axes:
+        return collectives.nap_allreduce(
+            absmax,
+            inter_axes=topo.inter_axes,
+            intra_axes=topo.intra_axes,
+            op="max",
+        )
+    return lax.pmax(absmax, topo.intra_axes)
 
 
-def _compressed_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes, group):
-    """Quantised allreduce with a globally agreed max-abs scale.
+def _compressed_fused_allreduce(parts, ctx: comm.CommContext, group):
+    """Quantised allreduce of one or more fused parts with *per-leaf*
+    scales.
 
-    Returns float32; :func:`_reduce_leaf` restores the caller's dtype.
-    The quantised payload travels in the narrowest integer dtype safe
-    for a ``group``-way sum (:func:`compressed_transport_dtype`), so the
-    byte accounting — and the planner's regime decision, which budgets
-    compressed leaves at this width — reflects the compression instead
-    of shipping int32 words as wide as the original f32 payload.
+    One shared max-abs scale across a whole fused bucket would be set by
+    its largest-magnitude leaf, rounding a small-magnitude neighbour
+    (layer-norm grads next to embedding grads) entirely to zero.  Each
+    leaf keeps its own scale: the per-leaf absmaxes travel as one fused
+    max-allreduce, the quantised leaves are concatenated and summed in
+    one transport-dtype allreduce, and each segment is dequantised with
+    its own scale.  Returns the per-leaf float32 sums, in ``parts``
+    order.
     """
-    bits = cfg.compress_bits
+    bits = ctx.policy.compress_bits
     qmax = float(2 ** (bits - 1) - 1)
     tdtype = compressed_transport_dtype(group, bits)
     # byte accounting: whenever the group-sum bound fits int16, the
@@ -168,56 +193,14 @@ def _compressed_allreduce(x, cfg: GradSyncConfig, inter_axes, intra_axes, group)
     # (int32 moved exactly as many bytes as uncompressed f32)
     if int(group) * int(qmax) <= jnp.iinfo(jnp.int16).max:
         assert tdtype.itemsize < jnp.dtype(jnp.float32).itemsize
-    absmax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    if inter_axes:
-        absmax = collectives.nap_allreduce(
-            absmax, inter_axes=inter_axes, intra_axes=intra_axes, op="max"
-        )
-    else:
-        absmax = lax.pmax(absmax, intra_axes)
-    scale = jnp.maximum(absmax / qmax, 1e-30)
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(tdtype)
-    summed = _one_allreduce(q, cfg, inter_axes, intra_axes)
-    return summed.astype(jnp.float32) * scale
-
-
-def _compressed_fused_allreduce(
-    parts, cfg: GradSyncConfig, inter_axes, intra_axes, group
-):
-    """Quantised allreduce of a fused bucket with *per-leaf* scales.
-
-    One shared max-abs scale across a whole fused bucket would be set by
-    its largest-magnitude leaf, rounding a small-magnitude neighbour
-    (layer-norm grads next to embedding grads) entirely to zero.  Each
-    leaf keeps its own scale instead: the per-leaf absmaxes are agreed
-    in a *single* fused small-vector max-allreduce (one latency-bound
-    collective, not one per leaf — the paper's canonical workload), the
-    quantised leaves are concatenated and summed in one transport-dtype
-    allreduce, and each segment is dequantised with its own scale.
-    Returns the per-leaf float32 sums, in ``parts`` order.
-    """
-    bits = cfg.compress_bits
-    qmax = float(2 ** (bits - 1) - 1)
-    tdtype = compressed_transport_dtype(group, bits)
-    if int(group) * int(qmax) <= jnp.iinfo(jnp.int16).max:
-        assert tdtype.itemsize < jnp.dtype(jnp.float32).itemsize
-    absmax = jnp.stack(
-        [jnp.max(jnp.abs(p)).astype(jnp.float32) for p in parts]
-    )
-    if inter_axes:
-        absmax = collectives.nap_allreduce(
-            absmax, inter_axes=inter_axes, intra_axes=intra_axes, op="max"
-        )
-    else:
-        absmax = lax.pmax(absmax, intra_axes)
-    scales = jnp.maximum(absmax / qmax, 1e-30)
+    scales = jnp.maximum(_agreed_absmax(parts, ctx) / qmax, 1e-30)
     q = jnp.concatenate(
         [
             jnp.clip(jnp.round(p / scales[i]), -qmax, qmax).astype(tdtype)
             for i, p in enumerate(parts)
         ]
     )
-    summed = _one_allreduce(q, cfg, inter_axes, intra_axes)
+    summed = _one_allreduce(q, ctx)
     outs, off = [], 0
     for i, p in enumerate(parts):
         seg = summed[off : off + p.size].astype(jnp.float32) * scales[i]
@@ -226,22 +209,28 @@ def _compressed_fused_allreduce(
     return outs
 
 
-def _reduce_leaf(g, cfg: GradSyncConfig, inter_axes, intra_axes, group):
+def _compressed_allreduce(x, ctx: comm.CommContext, group):
+    """Single-leaf quantised allreduce (float32 out; caller re-dtypes)."""
+    return _compressed_fused_allreduce([x.reshape(-1)], ctx, group)[0].reshape(
+        x.shape
+    )
+
+
+def _reduce_leaf(g, ctx: comm.CommContext, group):
     """Allreduce one payload with op/mean/dtype semantics in one place.
 
     Every payload — float, bf16, integer, fused flat bucket — funnels
     through here so the transport dtype, the mean division and the
     round-trip back to the original dtype cannot diverge between code
-    paths (they used to: integer leaves skipped ``mean`` silently and
-    the compressed path returned hardcoded float32).
+    paths.
     """
     dtype = g.dtype
     is_float = jnp.issubdtype(dtype, jnp.floating)
-    if cfg.compress_bits and is_float:
-        red = _compressed_allreduce(g, cfg, inter_axes, intra_axes, group)
+    if ctx.policy.compress_bits and is_float:
+        red = _compressed_allreduce(g, ctx, group)
     else:
-        red = _one_allreduce(g, cfg, inter_axes, intra_axes)
-    if cfg.mean and group > 1:
+        red = _one_allreduce(g, ctx)
+    if ctx.policy.mean and group > 1:
         if is_float:
             red = red / group
         else:
@@ -254,11 +243,13 @@ def _reduce_leaf(g, cfg: GradSyncConfig, inter_axes, intra_axes, group):
 # ---------------------------------------------------------------------------
 
 
-def _leaf_specs(leaves, cfg: GradSyncConfig, group: int):
+def _leaf_specs(leaves, policy: comm.CommPolicy, group: int):
     def transport_itemsize(dt, fusible):
-        if cfg.compress_bits and fusible:
+        if policy.compress_bits and fusible:
             return int(
-                compressed_transport_dtype(group, cfg.compress_bits).itemsize
+                compressed_transport_dtype(
+                    group, policy.compress_bits
+                ).itemsize
             )
         return None
 
@@ -267,38 +258,44 @@ def _leaf_specs(leaves, cfg: GradSyncConfig, group: int):
     )
 
 
-def _plan(leaves, cfg: GradSyncConfig, n: int, ppn: int, group: int):
+def _plan(leaves, policy: comm.CommPolicy, topology: comm.Topology):
     threshold = (
-        cfg.small_threshold_bytes
-        if cfg.small_threshold_bytes is None
-        else int(cfg.small_threshold_bytes)
+        policy.small_threshold_bytes
+        if policy.small_threshold_bytes is None
+        else int(policy.small_threshold_bytes)
     )
     return bucketing.plan_buckets(
-        _leaf_specs(leaves, cfg, group),
-        n,
-        ppn,
-        algorithm=cfg.algorithm,
+        _leaf_specs(leaves, policy, topology.group),
+        topology,
+        algorithm=policy.algorithm,
         small_threshold_bytes=threshold,
-        pipeline_chunks=cfg.pipeline_chunks,
-        bucket_bytes=cfg.bucket_bytes,
-        fuse=cfg.fuse_small_buckets,
+        pipeline_chunks=policy.pipeline_chunks,
+        bucket_bytes=policy.bucket_bytes,
+        fuse=policy.fuse_small_buckets,
     )
 
 
 def plan_for_tree(
-    tree: Any, *, cfg: GradSyncConfig, n: int, ppn: int
+    tree: Any,
+    *,
+    cfg: comm.CommPolicy,
+    n: int | None = None,
+    ppn: int | None = None,
+    topology: comm.Topology | None = None,
 ) -> bucketing.BucketPlan:
     """Bucket plan for a gradient pytree (arrays or ShapeDtypeStructs).
 
     Host-side and trace-free: the trainer calls this once on the
     abstract gradient tree (``jax.eval_shape``) to own the per-bucket
-    issue points, then hands the plan to :func:`sync_grads_local` so the
-    traced program executes exactly the schedule that was planned (and
-    that the simulator prices).
+    issue points, then hands the plan to the executor so the traced
+    program executes exactly the schedule that was planned (and that the
+    simulator prices).  Pass a :class:`comm.Topology` (preferred) or the
+    legacy ``(n, ppn)`` pair.
     """
+    if topology is None:
+        topology = comm.Topology.of(int(n or 1), int(ppn or 1))
     leaves = jax.tree.flatten(tree)[0]
-    group = max(1, n) * max(1, ppn)
-    return _plan(leaves, cfg, n, ppn, group)
+    return _plan(leaves, cfg, topology)
 
 
 # ---------------------------------------------------------------------------
@@ -306,20 +303,23 @@ def plan_for_tree(
 # ---------------------------------------------------------------------------
 
 
-def _bucket_cfg(cfg: GradSyncConfig, bucket) -> GradSyncConfig:
-    """The per-bucket config: the planner's decision, pinned.
+def _bucket_ctx(ctx: comm.CommContext, bucket) -> comm.CommContext:
+    """The per-bucket context: the planner's decision, pinned.
 
-    ``small_threshold_bytes`` is cleared because the algorithm is already
+    ``small_threshold_bytes`` is cleared because the engine is already
     resolved — the trace-time dispatcher must not re-decide."""
-    return dataclasses.replace(
-        cfg,
-        algorithm=bucket.algorithm,
-        pipeline_chunks=bucket.chunks,
-        small_threshold_bytes=None,
+    return comm.CommContext(
+        ctx.topology,
+        dataclasses.replace(
+            ctx.policy,
+            algorithm=bucket.algorithm,
+            pipeline_chunks=bucket.chunks,
+            small_threshold_bytes=None,
+        ),
     )
 
 
-def _execute_plan(leaves, plan, cfg, inter_axes, intra_axes, group):
+def _execute_plan(leaves, plan, ctx: comm.CommContext):
     """Issue every bucket's collective in plan (reverse-leaf) order.
 
     Buckets are data-independent; issuing them as separate collectives
@@ -327,31 +327,28 @@ def _execute_plan(leaves, plan, cfg, inter_axes, intra_axes, group):
     scheduler overlap bucket ``b``'s transfer with the compute that
     produces bucket ``b+1`` — the in-SPMD form of bucket-level async.
     """
+    group = ctx.topology.group
     out = [None] * len(leaves)
     for bucket in plan.buckets:
-        bcfg = _bucket_cfg(cfg, bucket)
+        bctx = _bucket_ctx(ctx, bucket)
         if len(bucket.leaves) == 1:
             i = bucket.leaves[0]
-            out[i] = _reduce_leaf(
-                leaves[i], bcfg, inter_axes, intra_axes, group
-            )
+            out[i] = _reduce_leaf(leaves[i], bctx, group)
             continue
         parts = [leaves[i].reshape(-1) for i in bucket.leaves]
         is_float = jnp.issubdtype(leaves[bucket.leaves[0]].dtype, jnp.floating)
-        if cfg.compress_bits and is_float:
+        if ctx.policy.compress_bits and is_float:
             # fused + compressed: per-leaf scales (a shared scale would
             # zero out small-magnitude leaves), mean/dtype per segment
-            segs = _compressed_fused_allreduce(
-                parts, bcfg, inter_axes, intra_axes, group
-            )
+            segs = _compressed_fused_allreduce(parts, bctx, group)
             for i, seg in zip(bucket.leaves, segs):
                 g = leaves[i]
-                if cfg.mean and group > 1:
+                if ctx.policy.mean and group > 1:
                     seg = seg / group
                 out[i] = seg.reshape(g.shape).astype(g.dtype)
             continue
         flat = jnp.concatenate(parts)
-        red = _reduce_leaf(flat, bcfg, inter_axes, intra_axes, group)
+        red = _reduce_leaf(flat, bctx, group)
         off = 0
         for i in bucket.leaves:
             g = leaves[i]
@@ -360,40 +357,26 @@ def _execute_plan(leaves, plan, cfg, inter_axes, intra_axes, group):
     return out
 
 
-def sync_grads_local(
+def sync_with_context(
     grads: Any,
+    ctx: comm.CommContext,
     *,
-    cfg: GradSyncConfig,
-    inter_axes: tuple[str, ...],
-    intra_axes: tuple[str, ...],
     plan: bucketing.BucketPlan | None = None,
 ) -> Any:
-    """Synchronise a pytree of per-chip local gradients (inside shard_map).
+    """Bucket-scheduled allreduce sync under a :class:`comm.CommContext`
+    (the canonical entry — :meth:`comm.CommContext.sync_grads`).
 
     ``plan`` (optional) is a precomputed :func:`plan_for_tree` result —
     the trainer's per-bucket issue points.  When omitted, the plan is
-    solved here (host-side, cached per pytree signature x grid x config).
+    solved here (host-side, cached per pytree signature x topology x
+    policy).
     """
-    axes = tuple(inter_axes) + tuple(intra_axes)
-    group = int(
-        np.prod([compat.axis_size(a) for a in axes]) if axes else 1
-    )
+    ctx.topology.require_axes()
     leaves, treedef = jax.tree.flatten(grads)
     if not leaves:
         return grads
-
     if plan is None:
-        n = int(
-            np.prod([compat.axis_size(a) for a in inter_axes])
-            if inter_axes
-            else 1
-        )
-        ppn = int(
-            np.prod([compat.axis_size(a) for a in intra_axes])
-            if intra_axes
-            else 1
-        )
-        plan = _plan(leaves, cfg, n, ppn, group)
+        plan = _plan(leaves, ctx.policy, ctx.topology)
     else:
         sig = tuple(
             (int(np.prod(g.shape)) if g.shape else 1, np.dtype(g.dtype).name)
@@ -404,12 +387,89 @@ def sync_grads_local(
                 "bucket plan does not match the gradient pytree "
                 f"(plan for {plan.signature}, got {sig})"
             )
-    out = _execute_plan(leaves, plan, cfg, inter_axes, intra_axes, group)
+    out = _execute_plan(leaves, plan, ctx)
+    return jax.tree.unflatten(treedef, out)
+
+
+def sync_grads_local(
+    grads: Any,
+    *,
+    cfg: comm.CommPolicy,
+    inter_axes: tuple[str, ...],
+    intra_axes: tuple[str, ...],
+    plan: bucketing.BucketPlan | None = None,
+) -> Any:
+    """Synchronise a pytree of per-chip local gradients (inside shard_map).
+
+    Axis-names entry point: builds a :class:`comm.Topology` from the
+    named mesh axes (sizes resolved from the traced context) and a
+    :class:`comm.CommContext` from ``cfg``, then runs
+    :func:`sync_with_context`.
+    """
+    ctx = comm.CommContext(
+        comm.Topology.from_axes(inter_axes, intra_axes), cfg
+    )
+    return sync_with_context(grads, ctx, plan=plan)
+
+
+def sync_grads_sharded(
+    grads: Any, *, ctx: comm.CommContext
+) -> Any:
+    """ZeRO-style sharded gradient sync (inside shard_map).
+
+    Every leaf is *reduce-scattered* instead of allreduced: each chip
+    keeps only its 1-D shard of the reduced (optionally averaged)
+    gradient — the slice its optimizer partition owns — so per-chip
+    inter-node bytes are half the allreduce round trip and the full
+    gradient never materialises per chip.  Returns a pytree of 1-D
+    shards (leaf ``i``'s shard has ``ceil(ceil(n_i/ppn)/n)`` elements,
+    the MLA stripe-block layout); :func:`unshard_grads` inverts.
+
+    Compression is not supported on this route (quantised shards would
+    need their scales re-agreed post-scatter); configure
+    ``compress_bits=None``.
+    """
+    if ctx.policy.compress_bits:
+        raise NotImplementedError(
+            "sharded (reduce-scatter) grad sync does not support "
+            "compressed transport; use the allreduce route or set "
+            "compress_bits=None"
+        )
+    ctx.topology.require_axes()
+    group = ctx.topology.group
+    leaves, treedef = jax.tree.flatten(grads)
+    out = []
+    for g in leaves:
+        dtype = g.dtype
+        is_float = jnp.issubdtype(dtype, jnp.floating)
+        red = ctx.reduce_scatter(g.reshape(-1), op="sum")
+        if ctx.policy.mean and group > 1:
+            if is_float:
+                red = red / group
+            else:
+                red = jnp.round(red.astype(jnp.float32) / group)
+        out.append(red.astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def unshard_grads(shards: Any, like: Any, *, ctx: comm.CommContext) -> Any:
+    """Allgather a :func:`sync_grads_sharded` result back to full leaves.
+
+    ``like`` is a pytree of arrays or ShapeDtypeStructs giving the
+    original leaf shapes (the padding stripped per leaf).
+    """
+    shard_leaves, treedef = jax.tree.flatten(shards)
+    like_leaves = jax.tree.flatten(like)[0]
+    out = []
+    for s, g in zip(shard_leaves, like_leaves):
+        elems = int(np.prod(g.shape)) if g.shape else 1
+        full = ctx.allgather(s, elems=elems)
+        out.append(full.reshape(g.shape).astype(g.dtype))
     return jax.tree.unflatten(treedef, out)
 
 
 def make_grad_sync(
-    cfg: GradSyncConfig,
+    cfg: comm.CommPolicy,
     mesh,
     *,
     data_axes: tuple[str, ...],

@@ -73,11 +73,15 @@ __all__ = [
     "build_smp_schedule",
     "build_mla_schedule",
     "build_mla_pipelined_schedule",
+    "build_mla_rs_schedule",
+    "build_mla_ag_schedule",
     "ragged_splits",
     "chunk_offsets",
     "chunk_alignment",
     "mla_stripe_geometry",
     "mla_internode_lower_bound",
+    "rs_internode_lower_bound",
+    "ag_internode_lower_bound",
     "step_mask_tables",
     "p2p_recv_masks",
     "simulate_allreduce",
@@ -564,23 +568,48 @@ def mla_stripe_geometry(
     return stripes, blocks
 
 
+def _one_way_internode_lower_bound(n_nodes: int, ppn: int, elems: int) -> int:
+    """Worst-chip inter-node *elements* for one direction (RS or AG).
+
+    The chip of lane ``r`` on node ``j`` must push its contributions to
+    every sub-block it does not own across the slow domain
+    (``stripes[r] - blocks[r][j]`` elements).  The binding chip is the one
+    owning the smallest sub-block of the largest stripe.
+    """
+    if n_nodes <= 1:
+        return 0
+    stripes, blocks = mla_stripe_geometry(n_nodes, ppn, elems)
+    return max(
+        (sr - min(bl) for sr, bl in zip(stripes, blocks) if sr > 0),
+        default=0,
+    )
+
+
+def rs_internode_lower_bound(n_nodes: int, ppn: int, elems: int) -> int:
+    """Uneven-block lower bound on per-chip inter-node elements sent by
+    the striped *reduce-scatter* (the RS half of the MLA allreduce)."""
+    return _one_way_internode_lower_bound(n_nodes, ppn, elems)
+
+
+def ag_internode_lower_bound(n_nodes: int, ppn: int, elems: int) -> int:
+    """Uneven-block lower bound on per-chip inter-node elements sent by
+    the striped *allgather* (the AG half of the MLA allreduce)."""
+    return _one_way_internode_lower_bound(n_nodes, ppn, elems)
+
+
 def mla_internode_lower_bound(n_nodes: int, ppn: int, elems: int) -> int:
     """Uneven-block lower bound on per-chip inter-node *elements* sent.
 
     The chip of lane ``r`` on node ``j`` must push its contributions to
     every sub-block it does not own across the slow domain during the
     reduce-scatter (``stripes[r] - blocks[r][j]`` elements) and the same
-    amount back during the allgather.  The binding chip is the one owning
-    the smallest sub-block of the largest stripe.
+    amount back during the allgather — the sum of the
+    :func:`rs_internode_lower_bound` and :func:`ag_internode_lower_bound`
+    one-way bounds.
     """
-    if n_nodes <= 1:
-        return 0
-    stripes, blocks = mla_stripe_geometry(n_nodes, ppn, elems)
-    worst = max(
-        (sr - min(bl) for sr, bl in zip(stripes, blocks) if sr > 0),
-        default=0,
-    )
-    return 2 * worst
+    return rs_internode_lower_bound(
+        n_nodes, ppn, elems
+    ) + ag_internode_lower_bound(n_nodes, ppn, elems)
 
 
 def _phase_weights(k: int) -> list[float]:
@@ -749,6 +778,47 @@ def build_mla_schedule(
     phases = _mla_phase_steps(n_nodes, ppn, elems, 1.0, 0)
     steps = [st for phase in phases for st in phase]
     return P2PSchedule(n_nodes, ppn, tuple(steps), kind="mla")
+
+
+@functools.lru_cache(maxsize=None)
+def build_mla_rs_schedule(
+    n_nodes: int, ppn: int, elems: int | None = None
+) -> P2PSchedule:
+    """Striped *reduce-scatter* schedule: the first two MLA phases.
+
+    Intra-pod reduce-scatter stripes the pod partial across the ``ppn``
+    lanes, then every lane runs an independent reduce-scatter over the
+    slow domain — chip ``(j, r)`` ends up owning the fully reduced block
+    ``(r, j)`` of :func:`mla_stripe_geometry`.  With ``elems`` the
+    per-pair fractions are ragged, so
+    ``max_internode_bytes_per_chip`` equals the one-way lower bound
+    (:func:`rs_internode_lower_bound`) — half the allreduce's round trip.
+    """
+    if n_nodes < 1 or ppn < 1:
+        raise ValueError("n_nodes and ppn must be positive")
+    intra_rs, inter_rs, _, _ = _mla_phase_steps(n_nodes, ppn, elems, 1.0, 0)
+    return P2PSchedule(
+        n_nodes, ppn, tuple(intra_rs + inter_rs), kind="mla_rs"
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def build_mla_ag_schedule(
+    n_nodes: int, ppn: int, elems: int | None = None
+) -> P2PSchedule:
+    """Striped *allgather* schedule: the last two MLA phases.
+
+    The exact mirror of :func:`build_mla_rs_schedule`: every lane
+    allgathers its blocks over the slow domain, then an intra-pod
+    allgather rebuilds the payload — per-chip inter-node bytes equal the
+    one-way lower bound (:func:`ag_internode_lower_bound`).
+    """
+    if n_nodes < 1 or ppn < 1:
+        raise ValueError("n_nodes and ppn must be positive")
+    _, _, inter_ag, intra_ag = _mla_phase_steps(n_nodes, ppn, elems, 1.0, 0)
+    return P2PSchedule(
+        n_nodes, ppn, tuple(inter_ag + intra_ag), kind="mla_ag"
+    )
 
 
 @functools.lru_cache(maxsize=None)

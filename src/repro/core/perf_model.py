@@ -38,6 +38,11 @@ __all__ = [
     "cost_nap",
     "cost_mla",
     "cost_mla_pipelined",
+    "cost_psum",
+    "cost_reduce_scatter",
+    "cost_allgather",
+    "cost_reduce_scatter_flat",
+    "cost_allgather_flat",
     "optimal_pipeline_chunks",
     "crossover_bytes",
     "dispatched_allreduce_cost",
@@ -56,6 +61,87 @@ class MachineParams:
     R_N: float      # per-node injection bandwidth     [B/s]
     gamma: float    # local reduction cost             [s/B]
     name: str = "machine"
+
+    @classmethod
+    def fit(
+        cls,
+        measurements,
+        *,
+        base: "MachineParams | None" = None,
+        name: str = "fitted",
+    ) -> "MachineParams":
+        """Least-squares fit of the inter-node constants from measured
+        message times (ROADMAP open item: "measure the real crossover …
+        and fit MachineParams").
+
+        ``measurements`` is an iterable of ``(nbytes, seconds)`` or
+        ``(nbytes, seconds, active_per_node)`` rows, each the measured
+        wall time of ONE inter-node message step with
+        ``active_per_node`` concurrent senders per node (default 1) —
+        the quantity :func:`maxrate_message_cost` models as
+        ``alpha + k*s / min(R_N, k*R_b)``:
+
+        * ``alpha`` and ``R_b`` come from an ordinary linear
+          least-squares fit of ``t = alpha + s/R_b`` over the ``k == 1``
+          rows (at least two distinct sizes required);
+        * ``R_N`` (injection bandwidth) comes from the ``k > 1`` rows:
+          a through-origin least-squares fit of ``t - alpha = k*s/R_N``
+          restricted to injection-limited rows (those slower than the
+          fitted per-process model predicts).  Without such rows the
+          ``base`` injection constant is kept.
+
+        Intra-node constants (``alpha_l``/``beta_l``/``gamma``) are
+        inherited from ``base`` (default :data:`TPU_V5E_POD`) — they are
+        not observable from inter-node message timings.
+        """
+        import numpy as np
+
+        base = base or TPU_V5E_POD
+        rows = [
+            (float(r[0]), float(r[1]), int(r[2]) if len(r) > 2 else 1)
+            for r in measurements
+        ]
+        single = [(s, t) for s, t, k in rows if k <= 1]
+        if len({s for s, _ in single}) < 2:
+            raise ValueError(
+                "MachineParams.fit needs >= 2 single-sender (k == 1) "
+                "measurements at distinct sizes to identify alpha and R_b"
+            )
+        A = np.array([[1.0, s] for s, _ in single])
+        t = np.array([tt for _, tt in single])
+        (alpha, slope), *_ = np.linalg.lstsq(A, t, rcond=None)
+        alpha = max(float(alpha), 0.0)
+        if slope <= 0:
+            raise ValueError(
+                "measured times do not grow with message size; cannot "
+                "identify R_b (check the measurement units)"
+            )
+        R_b = 1.0 / float(slope)
+        R_N = base.R_N
+        multi = [(s, t, k) for s, t, k in rows if k > 1]
+        if multi:
+            # keep only rows the per-process model cannot explain — the
+            # injection-limited regime where min(R_N, k*R_b) == R_N
+            limited = [
+                (k * s, tt - alpha)
+                for s, tt, k in multi
+                if tt - alpha > (s / R_b) * 1.02
+            ]
+            if limited:
+                x = np.array([v for v, _ in limited])
+                y = np.array([v for _, v in limited])
+                inv_rn = float((x * y).sum() / (x * x).sum())
+                if inv_rn > 0:
+                    R_N = 1.0 / inv_rn
+        return cls(
+            alpha_l=base.alpha_l,
+            beta_l=base.beta_l,
+            alpha=alpha,
+            R_b=R_b,
+            R_N=R_N,
+            gamma=base.gamma,
+            name=name,
+        )
 
 
 # Gemini-class constants (order of magnitude from the max-rate papers).
@@ -231,12 +317,88 @@ def _cost_mla_pipelined_opt(
     return cost_mla_pipelined(s, n, ppn, p, chunks=None)
 
 
-_LARGE_COSTS = {
-    "smp": cost_smp,
-    "rd": cost_rd,
-    "mla": cost_mla,
-    "mla_pipelined": _cost_mla_pipelined_opt,
-}
+def cost_psum(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Native single-level reduce over the joint grid — the fallback
+    engine's price.  Modeled as node-agnostic recursive doubling over all
+    ``n*ppn`` chips (what XLA's psum costs at worst on a flat ring/tree).
+    """
+    if n <= 1:
+        return (p.alpha_l + p.beta_l * s + p.gamma * s) * _log2(ppn)
+    return cost_rd(s, n, ppn, p)
+
+
+def _striped_one_way_cost(
+    s: float, n: int, ppn: int, p: MachineParams
+) -> float:
+    """Shared transport term of one striped RS *or* AG direction: intra
+    stripe phase + per-lane inter phase (all ``ppn`` lanes inject at
+    once).  The single source both directions price from — RS adds the
+    fold pass on top."""
+    lanes = max(1, ppn)
+    li = math.ceil(_log2(ppn)) if ppn > 1 else 0
+    t_intra = li * p.alpha_l + p.beta_l * s * (lanes - 1) / lanes
+    if n > 1:
+        lo = math.ceil(_log2(n))
+        lane_bytes = (s / lanes) * (n - 1) / n
+        rate = min(p.R_b, p.R_N / lanes)
+        t_inter = lo * p.alpha + lane_bytes / rate
+    else:
+        t_inter = 0.0
+    return t_intra + t_inter
+
+
+def cost_reduce_scatter(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Node-aware striped reduce-scatter (the RS half of the MLA
+    allreduce): intra stripe + per-lane inter RS, one fold pass."""
+    return _striped_one_way_cost(s, n, ppn, p) + p.gamma * s
+
+
+def cost_allgather(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Node-aware striped allgather (the AG half of the MLA allreduce):
+    per-lane inter AG + intra AG, no reduction work."""
+    return _striped_one_way_cost(s, n, ppn, p)
+
+
+def _flat_one_way_cost(s: float, n: int, ppn: int, p: MachineParams) -> float:
+    """Shared transport term of one flat (node-agnostic) RS or AG
+    direction over all ``n*ppn`` chips: every chip's ``s*(p-1)/p`` bytes
+    cross the slow domain injection-limited whenever ``n > 1``."""
+    chips = max(1, n * ppn)
+    steps = math.ceil(_log2(chips))
+    bytes_moved = s * (chips - 1) / chips
+    if n > 1:
+        rate = min(p.R_b, p.R_N / max(1, ppn))
+        return steps * p.alpha + bytes_moved / rate
+    return steps * p.alpha_l + p.beta_l * bytes_moved
+
+
+def cost_reduce_scatter_flat(
+    s: float, n: int, ppn: int, p: MachineParams
+) -> float:
+    """Node-agnostic flat reduce-scatter — the baseline the striped
+    engine beats whenever ``n > 1``."""
+    return _flat_one_way_cost(s, n, ppn, p) + p.gamma * s
+
+
+def cost_allgather_flat(
+    s: float, n: int, ppn: int, p: MachineParams
+) -> float:
+    """Node-agnostic flat allgather — mirror of
+    :func:`cost_reduce_scatter_flat` without the fold pass."""
+    return _flat_one_way_cost(s, n, ppn, p)
+
+
+# NOTE: the old module-local ``_LARGE_COSTS`` side table is gone — the
+# engine registry (``repro.core.comm``) is the single place an engine
+# declares its cost model, and ``crossover_bytes`` resolves the
+# ``large`` contender there (a plain callable is also accepted, so the
+# model layer stays usable standalone).
+def _resolve_large_cost(large):
+    if callable(large):
+        return large
+    from . import comm
+
+    return comm.get_engine(large).cost
 
 
 def crossover_bytes(
@@ -250,15 +412,16 @@ def crossover_bytes(
     """Smallest message size where the ``large``-regime algorithm becomes
     cheaper than NAP (the paper measured ~2048 B vs SMP at 32 768
     processes).  ``large="mla"`` yields the dispatcher's NAP↔MLA switch
-    point.
+    point.  ``large`` is a registered engine name (its declared cost
+    model is used) or a bare cost callable.
 
     Returns ``math.inf`` when NAP is still cheaper at the search cap
     ``hi`` — there is no crossover in the searched range, and callers
-    (``collectives.auto_crossover_bytes``, the grad-sync planner) treat
+    (``comm.Topology.crossover_bytes``, the grad-sync planner) treat
     the saturated result as "latency regime everywhere" instead of
     mistaking the cap for a real 4 MiB switch point.
     """
-    cost_large = _LARGE_COSTS[large]
+    cost_large = _resolve_large_cost(large)
     if cost_nap(lo, n, ppn, p) > cost_large(lo, n, ppn, p):
         return lo
     if cost_nap(hi, n, ppn, p) <= cost_large(hi, n, ppn, p):

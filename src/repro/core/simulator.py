@@ -43,6 +43,7 @@ from .perf_model import MachineParams
 __all__ = [
     "simulate_time",
     "simulate_algorithm",
+    "simulate_collective",
     "simulate_bucketed_sync",
     "internode_bytes_per_chip",
 ]
@@ -228,26 +229,20 @@ def simulate_time(
     return float(t.max())
 
 
-_BUILDERS = {
-    "nap": napalg.build_nap_schedule,
-    "rd": napalg.build_rd_schedule,
-    "smp": napalg.build_smp_schedule,
-    "mla": napalg.build_mla_schedule,
-}
-
-
 def _build(algo, n_nodes, ppn, s, p, chunks=None, elems=None):
-    if algo == "mla_pipelined":
-        if chunks is None:
-            from . import perf_model as pm
+    """Resolve an engine's schedule through the registry — no local
+    per-engine name tables to fall out of sync with registrations."""
+    from . import comm
 
-            chunks = pm.optimal_pipeline_chunks(s, n_nodes, ppn, p)
-        return napalg.build_mla_pipelined_schedule(
-            n_nodes, ppn, chunks, elems
-        )
-    if algo == "mla" and elems is not None:
-        return napalg.build_mla_schedule(n_nodes, ppn, elems)
-    return _BUILDERS[algo](n_nodes, ppn)
+    if chunks is None and comm.find_engine(algo).chunked:
+        from . import perf_model as pm
+
+        # chunked engines replay at the model-optimal depth (so the
+        # dispatcher's decision and the replay agree)
+        chunks = pm.optimal_pipeline_chunks(s, n_nodes, ppn, p)
+    return comm.engine_schedule(
+        algo, n_nodes, ppn, chunks=chunks or 1, elems=elems
+    )
 
 
 def simulate_algorithm(
@@ -265,10 +260,29 @@ def simulate_algorithm(
     ``algo="mla_pipelined"`` replays the chunked schedule; ``chunks=None``
     takes the model-optimal depth (so the dispatcher's decision and the
     replay agree).  ``elems`` switches MLA flavours to exact ragged-stripe
-    message sizes instead of the even ideal.
+    message sizes instead of the even ideal.  ``algo="mla_rs"`` /
+    ``"mla_ag"`` replay the striped reduce-scatter / allgather halves —
+    the first-class RS/AG collectives of :mod:`repro.core.comm`.
     """
     # the schedule builders are lru_cached, so no cache layer needed here
     return simulate_time(_build(algo, n_nodes, ppn, s, p, chunks, elems), s, p)
+
+
+def simulate_collective(
+    topology,
+    algo: str,
+    s: float,
+    *,
+    chunks: int | None = None,
+    elems: int | None = None,
+) -> float:
+    """Topology-first wrapper of :func:`simulate_algorithm`: the grid
+    shape and machine constants come from one
+    :class:`repro.core.comm.Topology` instead of loose kwargs."""
+    return simulate_algorithm(
+        algo, topology.n_nodes, topology.ppn, s, topology.params,
+        chunks=chunks, elems=elems,
+    )
 
 
 def _bucket_duration(

@@ -17,6 +17,7 @@ __all__ = [
     "make_mesh",
     "make_production_mesh",
     "mesh_axis_sizes",
+    "mesh_topology",
     "DATA_AXES",
     "MODEL_AXIS",
     "POD_AXIS",
@@ -83,3 +84,17 @@ def hierarchy_axes(mesh) -> tuple[tuple[str, ...], tuple[str, ...]]:
             ax for ax in (DATA_AXIS,) if ax in names
         )
     return (), tuple(ax for ax in (DATA_AXIS,) if ax in names)
+
+
+def mesh_topology(mesh, *, params=None):
+    """The :class:`repro.core.comm.Topology` of a production mesh.
+
+    The mesh→topology entry point of the topology-first collective API:
+    the DP hierarchy split comes from :func:`hierarchy_axes` (a "pod"
+    axis is the slow domain), the grid shape from the mesh axis sizes,
+    and ``params`` optionally overrides the machine constants.  Lazy
+    import keeps this module free of jax-backend state at import time.
+    """
+    from ..core.comm import Topology
+
+    return Topology.from_mesh(mesh, params=params)

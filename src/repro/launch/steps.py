@@ -176,24 +176,22 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
     """Pure data-parallel train step with *explicit* paper collectives.
 
     Parameters are replicated; each chip computes gradients on its batch
-    shard; gradient buckets and the loss scalar are synchronised with the
-    configured algorithm (``nap`` / ``rd`` / ``smp`` / ``psum`` / ``auto``)
-    via :mod:`repro.core.grad_sync` inside one ``shard_map`` — the paper's
-    technique integrated end-to-end in training.  Numerically equivalent
-    to the ``psum`` baseline (asserted in tests).
+    shard; gradient buckets and the loss scalar are synchronised through
+    a :class:`repro.core.comm.CommContext` built from the mesh topology
+    and the configured policy (``nap`` / ``rd`` / ``smp`` / ``psum`` /
+    ``auto`` …) inside one ``shard_map`` — the paper's technique
+    integrated end-to-end in training.  Numerically equivalent to the
+    ``psum`` baseline (asserted in tests).
     """
-    from ..core import collectives, grad_sync
+    from ..core import comm, grad_sync
     from ..models import ShardingPolicy
-    from .mesh import hierarchy_axes
+    from .mesh import mesh_topology
 
     model = build_model(cfg, ShardingPolicy())  # all compute chip-local
     sched = make_schedule(opt_cfg)
-    inter, intra = hierarchy_axes(mesh)
-    dp = tuple(inter) + tuple(intra)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    group = int(np.prod([sizes[a] for a in dp]))
-    n = int(np.prod([sizes[a] for a in inter])) if inter else 1
-    ppn = int(np.prod([sizes[a] for a in intra])) if intra else 1
+    topo = mesh_topology(mesh)
+    ctx = comm.CommContext(topo, sync_cfg)
+    group = topo.group
 
     # the trainer owns the per-bucket issue points: the bucket schedule is
     # planned once from the abstract gradient tree (same structure/dtypes
@@ -201,7 +199,7 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
     # order the scheduler decided is exactly what the SPMD program runs
     params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     bucket_plan = grad_sync.plan_for_tree(
-        params_sds, cfg=sync_cfg, n=n, ppn=ppn
+        params_sds, cfg=sync_cfg, topology=topo
     )
 
     def local_step(state, batch):
@@ -209,23 +207,17 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
         (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
             params, batch
         )
-        grads = grad_sync.sync_grads_local(
-            grads,
-            cfg=sync_cfg,
-            inter_axes=inter,
-            intra_axes=intra,
-            plan=bucket_plan,
-        )
+        grads = ctx.sync_grads(grads, plan=bucket_plan)
         # the paper's canonical workload: single-scalar latency-bound
         # allreduce (loss mean) through the same algorithm
-        if inter:
-            loss = collectives.hierarchical_allreduce(
-                loss, inter_axes=inter, intra_axes=intra,
+        if topo.inter_axes:
+            loss = ctx.allreduce(
+                loss,
                 algorithm=sync_cfg.algorithm
                 if sync_cfg.algorithm != "auto" else "nap",
             ) / group
         else:
-            loss = jax.lax.pmean(loss, intra)
+            loss = jax.lax.pmean(loss, topo.intra_axes)
         lr = sched(opt.step)
         new_params, new_opt, om = adamw_update(
             grads, opt, params,
@@ -238,7 +230,7 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
         )
 
     state_spec = {"params": P(), "opt": P()}
-    batch_spec = P(dp, None)
+    batch_spec = P(topo.axes, None)
     return compat.shard_map(
         local_step,
         mesh=mesh,

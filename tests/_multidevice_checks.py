@@ -917,6 +917,193 @@ def check_nap_extensions():
     record("nap_allreduce_large", ok)
 
 
+def check_comm_context_equivalence():
+    """PR-4 acceptance: the deprecated shims and the CommContext facade
+    produce identical dispatch and bitwise-identical results across an
+    op x dtype x grid sweep, and the shims warn exactly once."""
+    import warnings
+
+    from repro.core import comm, grad_sync
+
+    cases = [
+        ((4, 4), ("pod", "data")),
+        ((8, 2), ("pod", "data")),
+    ]
+    rng = np.random.default_rng(47)
+    ok = True
+    for shape, axes in cases:
+        mesh = make_mesh(shape, axes)
+        topo = comm.Topology.from_mesh(mesh)
+        ok &= (topo.n_nodes, topo.ppn) == shape
+        ctx = comm.CommContext(topo)
+        for op in ["sum", "max", "min"]:
+            for dt in [jnp.float32, jnp.bfloat16, jnp.int32]:
+                for size in [8, 3001]:  # latency + bandwidth regimes
+                    if dt == jnp.int32:
+                        xs = jnp.asarray(
+                            rng.integers(-50, 50, size=(16, size)).astype(
+                                np.int32
+                            )
+                        )
+                    else:
+                        xs = jnp.asarray(
+                            rng.normal(size=(16, size)).astype(np.float32)
+                        ).astype(dt)
+                    sm = lambda f: jax.jit(
+                        compat.shard_map(
+                            f, mesh=mesh,
+                            in_specs=P(axes), out_specs=P(axes),
+                        )
+                    )
+                    old = sm(
+                        partial(
+                            collectives.hierarchical_allreduce,
+                            inter_axes=axes[0], intra_axes=axes[1], op=op,
+                        )
+                    )(xs)
+                    new = sm(partial(ctx.allreduce, op=op))(xs)
+                    same = np.array_equal(
+                        np.asarray(old.astype(jnp.float32)),
+                        np.asarray(new.astype(jnp.float32)),
+                    )
+                    ok &= same
+    record("comm_ctx_allreduce_bitwise", ok)
+
+    # grad sync: GradSyncConfig shim route vs CommContext.sync_grads
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    topo = comm.Topology.from_mesh(mesh)
+    grads = {
+        "w": jnp.asarray(rng.normal(size=(16, 300)).astype(np.float32)),
+        "n": jnp.asarray(
+            rng.normal(size=(16, 8)).astype(np.float32)
+        ).astype(jnp.bfloat16),
+        "i": jnp.asarray(rng.integers(-30, 30, size=(16, 2)).astype(np.int32)),
+    }
+    specs = {k: P(("pod", "data")) for k in grads}
+    comm._DEPRECATION_WARNED.clear()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cfg = grad_sync.GradSyncConfig(algorithm="auto", mean=True)
+        grad_sync.GradSyncConfig(algorithm="auto", mean=True)
+        out_old = jax.jit(
+            compat.shard_map(
+                lambda g: grad_sync.sync_grads_local(
+                    g, cfg=cfg, inter_axes=("pod",), intra_axes=("data",)
+                ),
+                mesh=mesh, in_specs=(specs,), out_specs=specs,
+            )
+        )(grads)
+    dep = [
+        str(w.message)
+        for w in caught
+        if issubclass(w.category, DeprecationWarning)
+        and "deprecated" in str(w.message)
+    ]
+    ctx = comm.CommContext(topo, cfg)
+    out_new = jax.jit(
+        compat.shard_map(
+            lambda g: ctx.sync_grads(g),
+            mesh=mesh, in_specs=(specs,), out_specs=specs,
+        )
+    )(grads)
+    ok = all(
+        np.array_equal(
+            np.asarray(out_old[k].astype(jnp.float32)),
+            np.asarray(out_new[k].astype(jnp.float32)),
+        )
+        for k in grads
+    )
+    # one warning per shim used above: GradSyncConfig (constructed twice)
+    # and hierarchical_allreduce are the only deprecated entry points
+    ok &= len([m for m in dep if "GradSyncConfig" in m]) == 1
+    record("comm_ctx_grad_sync_bitwise", ok, warnings=len(dep))
+
+
+def check_comm_reduce_scatter_allgather():
+    """RS/AG as first-class collectives: the round trip equals the full
+    allreduce on ragged payloads, for sum and max, and the sharded
+    (ZeRO-style) grad-sync route matches the allreduce route."""
+    from repro.core import comm, grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    topo = comm.Topology.from_mesh(mesh)
+    ctx = comm.CommContext(topo)
+    rng = np.random.default_rng(53)
+    ok = True
+    for op, ref in [("sum", np.sum), ("max", np.max)]:
+        for size in [5, 37, 64, 4096]:
+            xs = jnp.asarray(rng.normal(size=(16, size)).astype(np.float32))
+
+            def rs_ag(v, _op=op, _size=size):
+                shard = ctx.reduce_scatter(v, op=_op)
+                return ctx.allgather(shard, elems=_size).reshape(v.shape)
+
+            got = np.asarray(
+                jax.jit(
+                    compat.shard_map(
+                        rs_ag, mesh=mesh,
+                        in_specs=P(("pod", "data")),
+                        out_specs=P(("pod", "data")),
+                    )
+                )(xs)
+            )
+            want = ref(np.asarray(xs), axis=0)
+            ok &= np.allclose(
+                got, np.tile(want, (16, 1)), rtol=1e-5, atol=1e-5
+            )
+    record("comm_rs_ag_roundtrip", ok)
+
+    # ZeRO-style sharded sync: reduce-scattered shards allgather back to
+    # exactly the allreduce-synced (mean) gradients
+    grads = {
+        "w": jnp.asarray(rng.normal(size=(16, 37)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32)),
+    }
+    specs = {k: P(("pod", "data")) for k in grads}
+
+    def sharded_roundtrip(g):
+        like = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), g
+        )
+        return grad_sync.unshard_grads(
+            ctx.sync_grads_sharded(g), like, ctx=ctx
+        )
+
+    out_sh = jax.jit(
+        compat.shard_map(
+            sharded_roundtrip, mesh=mesh, in_specs=(specs,), out_specs=specs
+        )
+    )(grads)
+    out_ar = jax.jit(
+        compat.shard_map(
+            lambda g: ctx.sync_grads(g),
+            mesh=mesh, in_specs=(specs,), out_specs=specs,
+        )
+    )(grads)
+    ok = all(
+        np.allclose(
+            np.asarray(out_sh[k]), np.asarray(out_ar[k]),
+            rtol=1e-5, atol=1e-6,
+        )
+        for k in grads
+    )
+    # per-chip shard sizes follow the stripe-block layout: ceil/ceil
+    shard_shapes = jax.eval_shape(
+        compat.shard_map(
+            lambda g: ctx.sync_grads_sharded(g),
+            mesh=mesh, in_specs=(specs,),
+            out_specs={k: P(("pod", "data")) for k in grads},
+        ),
+        grads,
+    )
+    for k, g in grads.items():
+        elems = int(np.prod(g.shape[1:]))  # per-chip local view
+        stripe = -(-elems // 4)  # ceil(e / ppn)
+        want = -(-stripe // 4)  # ceil(stripe / n): the block size
+        ok &= shard_shapes[k].shape == (16 * want,)  # 16 stacked shards
+    record("comm_sharded_grad_sync", ok)
+
+
 def main():
     assert jax.device_count() == N_DEV, jax.device_count()
     check_allreduce_correctness()
@@ -938,6 +1125,8 @@ def main():
     check_grad_sync_compressed_int16()
     check_dp_training_nap_equals_psum()
     check_nap_extensions()
+    check_comm_context_equivalence()
+    check_comm_reduce_scatter_allgather()
     print("RESULTS_JSON:" + json.dumps(RESULTS))
 
 

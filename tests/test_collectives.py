@@ -82,6 +82,10 @@ _EXPECTED = [
     "nap_allgather",
     "nap_reduce_scatter",
     "nap_allreduce_large",
+    "comm_ctx_allreduce_bitwise",
+    "comm_ctx_grad_sync_bitwise",
+    "comm_rs_ag_roundtrip",
+    "comm_sharded_grad_sync",
 ]
 
 

@@ -1,0 +1,411 @@
+"""Topology-first collective API: Topology, engine registry, CommContext.
+
+Host-side coverage of the PR-4 api_redesign (execution equivalence runs
+in tests/_multidevice_checks.py):
+
+* golden-table dispatch equivalence: ``comm.select_engine`` with the
+  default policy vs a frozen reimplementation of the PR-3
+  ``select_algorithm`` rules, across grids x payload sizes x ops x
+  threshold modes;
+* registry validation: typos raise at config/context build time with
+  the engine listing (not a bare KeyError inside tracing);
+* the deprecation shims warn exactly once;
+* RS/AG promotion: schedule byte accounting equals the ragged one-way
+  lower bounds, simulator replay included;
+* ``MachineParams.fit`` recovers generating constants;
+* ``compressed_transport_dtype`` refuses the silent-int64 overflow.
+"""
+
+import math
+import types
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import bucketing, collectives, comm, grad_sync, napalg
+from repro.core import perf_model as pm
+from repro.core import simulator as sim
+
+GRIDS = [(1, 16), (2, 16), (4, 4), (5, 3), (6, 1), (8, 16), (16, 16), (64, 16)]
+SIZES = [4, 512, 2048, 1 << 16, 1 << 20, 16 << 20, 64 << 20]
+
+
+def _legacy_select(nbytes, n, ppn, op="sum", small=None, params=None):
+    """Frozen copy of the PR-3 dispatch rules (the golden table)."""
+    mp = params or pm.TPU_V5E_POD
+    if n <= 1:
+        return "psum"
+    if op not in ("sum", "max", "min"):
+        return "nap" if ppn > 1 else "psum"
+    if small is not None:
+        threshold = float(small)
+    elif ppn <= 1:
+        threshold = 0.0
+    else:
+        threshold = pm.crossover_bytes(n, ppn, mp, large="mla")
+    if ppn > 1 and nbytes <= threshold:
+        return "nap"
+    chunks = pm.optimal_pipeline_chunks(float(nbytes), n, ppn, mp)
+    return "mla_pipelined" if chunks > 1 else "mla"
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+
+def test_topology_construction_and_validation():
+    t = comm.Topology.of(8, 16)
+    assert (t.n_nodes, t.ppn, t.group) == (8, 16, 128)
+    assert t.has_slow_domain and t.axes == ()
+    assert t.params is pm.TPU_V5E_POD
+    with pytest.raises(ValueError):
+        comm.Topology.of(0, 16)
+    # hashable + equal instances share the cached derived state
+    assert comm.Topology.of(8, 16) == t
+    assert hash(comm.Topology.of(8, 16)) == hash(t)
+
+
+def test_topology_from_mesh_duck_typed():
+    mesh = types.SimpleNamespace(
+        axis_names=("pod", "data", "model"),
+        devices=np.empty((2, 4, 2)),
+    )
+    t = comm.Topology.from_mesh(mesh)
+    # hierarchy_axes: "pod" is the slow domain, "data" the DP lane axis
+    assert (t.n_nodes, t.ppn) == (2, 4)
+    assert t.inter_axes == ("pod",) and t.intra_axes == ("data",)
+    t2 = comm.Topology.from_mesh(
+        mesh, inter_axes="pod", intra_axes=("data", "model")
+    )
+    assert (t2.n_nodes, t2.ppn) == (2, 8)
+    with pytest.raises(ValueError):
+        comm.Topology.from_mesh(mesh, inter_axes="nonexistent", intra_axes="data")
+    # overriding ONE level keeps the hierarchy default for the other
+    # (dropping it silently would yield a partial reduction)
+    t3 = comm.Topology.from_mesh(mesh, intra_axes=("data", "model"))
+    assert t3.inter_axes == ("pod",) and t3.ppn == 8
+    with pytest.raises(ValueError, match="both"):
+        comm.Topology.from_mesh(mesh, inter_axes="data")  # overlaps default
+
+
+def test_execution_requires_axis_names():
+    """A planning-only Topology (Topology.of) must refuse to execute —
+    the collectives would silently return unreduced values otherwise."""
+    ctx = comm.CommContext(comm.Topology.of(2, 4))
+    x = np.zeros(8, np.float32)
+    for call in (
+        lambda: ctx.allreduce(x),
+        lambda: ctx.reduce_scatter(x),
+        lambda: ctx.allgather(x, elems=8),
+    ):
+        with pytest.raises(ValueError, match="planning-only"):
+            call()
+    # single-chip topologies have nothing to reduce: no axes needed
+    comm.Topology.of(1, 1).require_axes()
+
+
+def test_register_engine_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        comm.register_engine("mla", execute=lambda x, **k: x)
+    assert comm.get_engine("mla").cost is pm.cost_mla  # untouched
+
+
+def test_legacy_algorithms_view_is_read_only_and_stable():
+    table = collectives.ALGORITHMS
+    assert collectives.ALGORITHMS is table  # identity-stable
+    with pytest.raises(TypeError):
+        table["custom"] = lambda x: x  # mutation fails loudly
+
+
+def test_topology_owns_cached_derived_state():
+    t = comm.Topology.of(16, 16)
+    assert t.crossover_bytes() == collectives.auto_crossover_bytes(16, 16)
+    assert t.crossover_bytes() == pm.crossover_bytes(
+        16, 16, pm.TPU_V5E_POD, large="mla"
+    )
+    # degenerate grids: inf (no slow domain) / 0.0 (no lanes)
+    assert math.isinf(comm.Topology.of(1, 16).crossover_bytes())
+    assert comm.Topology.of(16, 1).crossover_bytes() == 0.0
+    # schedules come from the same lru-cached builders
+    assert t.schedule("nap") is napalg.build_nap_schedule(16, 16)
+    assert t.schedule("mla", elems=1000) is napalg.build_mla_schedule(
+        16, 16, 1000
+    )
+    assert t.schedule("mla_pipelined", chunks=3, elems=1000) is (
+        napalg.build_mla_pipelined_schedule(16, 16, 3, 1000)
+    )
+    assert t.chunk_splits(10, 3) == napalg.ragged_splits(10, 3)
+    assert t.internode_lower_bound(1000) == napalg.mla_internode_lower_bound(
+        16, 16, 1000
+    )
+    assert t.internode_lower_bound(1000, "reduce_scatter") * 2 == (
+        t.internode_lower_bound(1000)
+    )
+    assert t.optimal_pipeline_chunks(64 << 20) == pm.optimal_pipeline_chunks(
+        float(64 << 20), 16, 16, pm.TPU_V5E_POD
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch: golden-table equivalence (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+@pytest.mark.parametrize("small", [None, 2048])
+def test_dispatch_golden_table(op, small):
+    """CommContext default-policy dispatch == PR-3 auto dispatch, exactly,
+    across grids x payload sizes x ops x threshold modes."""
+    for n, ppn in GRIDS:
+        topo = comm.Topology.of(n, ppn)
+        ctx = comm.CommContext(
+            topo, comm.CommPolicy(small_threshold_bytes=small)
+        )
+        for nbytes in SIZES:
+            want = _legacy_select(nbytes, n, ppn, op, small)
+            got = ctx.dispatch(nbytes, op).engine
+            assert got == want, (n, ppn, nbytes, op, small, got, want)
+            # the legacy wrapper rides the same registry path
+            assert (
+                collectives.select_algorithm(
+                    nbytes, n, ppn, op=op, small_threshold_bytes=small
+                )
+                == want
+            )
+
+
+def test_dispatch_pinned_and_chunk_resolution():
+    topo = comm.Topology.of(8, 16)
+    ctx = comm.CommContext(topo)
+    # pinned engines pass through with depth semantics of the planner
+    assert ctx.dispatch(1 << 20, algorithm="nap") == ("nap", 1)
+    assert ctx.dispatch(1 << 20, algorithm="mla") == ("mla", 1)
+    assert ctx.dispatch(1 << 20, algorithm="mla", pipeline_chunks=4) == (
+        "mla",
+        4,
+    )
+    d = ctx.dispatch(64 << 20, algorithm="mla_pipelined")
+    assert d.engine == "mla_pipelined"
+    assert d.chunks == topo.optimal_pipeline_chunks(64 << 20) > 1
+    # auto + pinned depth promotes a plain-MLA winner to its variant
+    small = comm.CommContext(
+        topo, comm.CommPolicy(pipeline_chunks=4)
+    ).dispatch(1 << 16)
+    assert small == ("mla_pipelined", 4) or small.engine == "nap"
+
+
+def test_bucket_planner_decisions_ride_the_registry():
+    leaves = tuple(
+        bucketing.LeafSpec(
+            index=i, elems=4096 * (i + 1), itemsize=4, dtype="float32",
+            fusible=True,
+        )
+        for i in range(4)
+    )
+    topo = comm.Topology.of(8, 16)
+    plan_t = bucketing.plan_buckets(leaves, topo)
+    plan_l = bucketing.plan_buckets(leaves, 8, 16)
+    assert plan_t is plan_l  # same cache entry: Topology keys the cache
+    for b in plan_t.buckets:
+        want = _legacy_select(b.transport_bytes, 8, 16)
+        assert b.algorithm == want
+    with pytest.raises(ValueError, match="registered engines"):
+        bucketing.plan_buckets(leaves, topo, algorithm="mla_typo")
+
+
+# ---------------------------------------------------------------------------
+# registry validation (satellite: typos fail at build time, listed)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_name_validation_lists_registry():
+    with pytest.raises(ValueError) as ei:
+        comm.get_engine("mla_pipelne")
+    msg = str(ei.value)
+    for name in ("nap", "mla", "mla_pipelined", "psum", "ring"):
+        assert name in msg
+    with pytest.raises(ValueError, match="registered engines"):
+        comm.CommPolicy(algorithm="napp")
+    with pytest.raises(ValueError, match="registered engines"):
+        grad_sync.GradSyncConfig(algorithm="napp")
+    # valid names (including the ones the old docstring omitted) pass
+    for name in (
+        "auto", "nap", "rd", "smp", "mla", "mla_pipelined", "psum",
+        "ring", "rabenseifner",
+    ):
+        comm.CommPolicy(algorithm=name)
+    with pytest.raises(ValueError, match="compress_bits"):
+        comm.CommPolicy(compress_bits=1)
+
+
+def test_unsupported_op_error_lists_supporting_engines():
+    with pytest.raises(NotImplementedError) as ei:
+        comm.select_engine(comm.Topology.of(8, 16), 1024, op="prod")
+    assert "psum" in str(ei.value) and "ops" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (satellite: exactly one warning per shim)
+# ---------------------------------------------------------------------------
+
+
+def test_gradsyncconfig_shim_warns_exactly_once():
+    comm._DEPRECATION_WARNED.discard("grad_sync.GradSyncConfig")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = grad_sync.GradSyncConfig(algorithm="nap")
+        grad_sync.GradSyncConfig(algorithm="mla", mean=False)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1 and "GradSyncConfig" in str(dep[0].message)
+    # the shim IS a CommPolicy — identical fields, usable everywhere
+    assert isinstance(cfg, comm.CommPolicy)
+    assert cfg.algorithm == "nap" and cfg.mean and cfg.bucket_bytes is None
+
+
+# ---------------------------------------------------------------------------
+# RS/AG promotion: accounting equals the ragged lower bounds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,ppn", [(2, 4), (5, 3), (8, 16), (16, 16), (6, 1), (2, 16)]
+)
+def test_rs_ag_schedule_accounting_equals_lower_bound(n, ppn):
+    for elems in [1, 5, 37, 1000, 4096]:
+        s = float(elems * 4)
+        rs = napalg.build_mla_rs_schedule(n, ppn, elems)
+        ag = napalg.build_mla_ag_schedule(n, ppn, elems)
+        assert rs.max_internode_bytes_per_chip(s) == pytest.approx(
+            napalg.rs_internode_lower_bound(n, ppn, elems) * 4.0
+        )
+        assert ag.max_internode_bytes_per_chip(s) == pytest.approx(
+            napalg.ag_internode_lower_bound(n, ppn, elems) * 4.0
+        )
+        # the two one-way bounds compose to the allreduce round trip
+        assert (
+            napalg.rs_internode_lower_bound(n, ppn, elems)
+            + napalg.ag_internode_lower_bound(n, ppn, elems)
+        ) == napalg.mla_internode_lower_bound(n, ppn, elems)
+
+
+def test_rs_ag_simulator_replay():
+    topo = comm.Topology.of(8, 16)
+    elems = 1 << 16
+    s = float(elems * 4)
+    # the simulator replays the promoted collectives by engine name
+    t_rs = sim.simulate_collective(topo, "mla_rs", s, elems=elems)
+    t_ag = sim.simulate_collective(topo, "mla_ag", s, elems=elems)
+    t_ar = sim.simulate_collective(topo, "mla", s, elems=elems)
+    assert 0 < t_rs < t_ar and 0 < t_ag < t_ar
+    # byte accounting through the public simulator API too
+    got = sim.internode_bytes_per_chip("mla_rs", 8, 16, s, elems=elems)
+    assert got == pytest.approx(
+        napalg.rs_internode_lower_bound(8, 16, elems) * 4.0
+    )
+
+
+def test_rs_ag_dispatch_rows():
+    assert comm.select_engine(
+        comm.Topology.of(8, 16), 1 << 20, collective="reduce_scatter"
+    ) == ("mla_rs", 1)
+    assert comm.select_engine(
+        comm.Topology.of(1, 16), 1 << 20, collective="reduce_scatter"
+    ) == ("psum_scatter", 1)
+    assert comm.select_engine(
+        comm.Topology.of(8, 16), 1 << 20, collective="allgather"
+    ) == ("mla_ag", 1)
+    assert comm.select_engine(
+        comm.Topology.of(1, 16), 1 << 20, collective="allgather"
+    ) == ("all_gather", 1)
+    # node-aware RS is cheaper than the flat baseline whenever n > 1
+    mp = pm.TPU_V5E_POD
+    for s in [1 << 16, 1 << 22]:
+        assert pm.cost_reduce_scatter(s, 8, 16, mp) < (
+            pm.cost_reduce_scatter_flat(s, 8, 16, mp)
+        )
+
+
+# ---------------------------------------------------------------------------
+# MachineParams.fit (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_machine_params_fit_recovers_constants():
+    P = pm.TPU_V5E_POD
+    rows = []
+    for s in [256, 1024, 4096, 16384, 65536, 1 << 20]:
+        rows.append((s, pm.maxrate_message_cost(float(s), P, 1), 1))
+        rows.append((s, pm.maxrate_message_cost(float(s), P, 16), 16))
+    f = pm.MachineParams.fit(rows, base=P, name="roundtrip")
+    assert f.alpha == pytest.approx(P.alpha, rel=1e-6)
+    assert f.R_b == pytest.approx(P.R_b, rel=1e-6)
+    assert f.R_N == pytest.approx(P.R_N, rel=1e-6)
+    assert f.alpha_l == P.alpha_l and f.gamma == P.gamma
+    # the fitted params drop straight into the crossover solver
+    assert pm.crossover_bytes(8, 16, f, large="mla") == pytest.approx(
+        pm.crossover_bytes(8, 16, P, large="mla"), rel=1e-3
+    )
+
+
+def test_machine_params_fit_without_injection_rows_keeps_base():
+    P = pm.BLUE_WATERS
+    rows = [
+        (s, pm.maxrate_message_cost(float(s), P, 1))
+        for s in [512, 4096, 65536]
+    ]
+    f = pm.MachineParams.fit(rows, base=P)
+    assert f.R_N == P.R_N  # unobservable without k > 1 rows
+    assert f.R_b == pytest.approx(P.R_b, rel=1e-6)
+
+
+def test_machine_params_fit_underdetermined_raises():
+    with pytest.raises(ValueError, match="single-sender"):
+        pm.MachineParams.fit([(1024, 1e-5)])
+
+
+# ---------------------------------------------------------------------------
+# compressed transport overflow (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_transport_dtype_boundaries_and_overflow():
+    import jax.numpy as jnp
+
+    assert grad_sync.compressed_transport_dtype(1, 8) == jnp.dtype(jnp.int8)
+    assert grad_sync.compressed_transport_dtype(257, 8) == jnp.dtype(
+        jnp.int16
+    )
+    assert grad_sync.compressed_transport_dtype(300, 8) == jnp.dtype(
+        jnp.int32
+    )
+    # int64-sized groups: explicit error instead of a dtype the runtime
+    # silently degrades to int32 (jax x64 disabled is the default)
+    with pytest.raises(OverflowError, match="int32"):
+        grad_sync.compressed_transport_dtype(20_000_000, 8)
+
+
+# ---------------------------------------------------------------------------
+# registry as the single source (ALGORITHMS view, crossover resolution)
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_algorithms_view_derives_from_registry():
+    table = collectives.ALGORITHMS
+    assert set(table) == {"nap", "rd", "smp", "mla", "mla_pipelined", "psum"}
+    assert table["nap"] is collectives.nap_allreduce
+    assert table["mla"] is collectives.mla_allreduce
+
+
+def test_crossover_large_contender_resolves_via_registry():
+    mp = pm.TPU_V5E_POD
+    # engine-name and bare-callable forms agree
+    assert pm.crossover_bytes(16, 16, mp, large="mla") == pm.crossover_bytes(
+        16, 16, mp, large=pm.cost_mla
+    )
+    assert pm.crossover_bytes(16, 16, mp, large="smp") == pm.crossover_bytes(
+        16, 16, mp, large=pm.cost_smp
+    )
+    with pytest.raises(ValueError, match="registered"):
+        pm.crossover_bytes(16, 16, mp, large="not_an_engine")
