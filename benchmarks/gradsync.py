@@ -177,6 +177,134 @@ def overlap_section(n_pods: int, ppn: int) -> tuple[list, dict]:
     return csv_rows, table
 
 
+# wire widths the compressed transport can execute (bits -> bytes/elem);
+# 16 rides the legacy int16 accumulator width, 32 is uncompressed f32
+_WIRE_ITEMSIZE = {4: 0.5, 8: 1.0, 16: 2.0, 32: 4.0}
+
+
+def compression_collect() -> tuple[list, dict]:
+    """Per-bucket bytes-on-wire at 4/8/16/32-bit transport widths
+    against the uncompressed inter-node lower bound, plus step-time
+    deltas from the simulator's compute-port replay.
+
+    The bucket partition is pinned at the uncompressed plan so widths
+    compare bucket-for-bucket.  Wire bytes per float bucket are
+    ``ceil(elems * bits/8)`` — exactly what the planner budgets and the
+    packed kernels move; the replay prices compressed buckets with
+    :func:`repro.core.perf_model.cost_mla_compressed` (f32 intra
+    pre-combine, wire-width inter hops, quantize/unpack compute) via the
+    5-element ``(wire, algo, chunks, elems, raw)`` simulator rows.
+    """
+    rows, grids = [], {}
+    for n_pods, ppn in [(2, 16), (8, 16), (64, 16)]:
+        plan = bucketing.plan_buckets(_model_leaf_specs(), n_pods, ppn)
+        crossover = plan.crossover_bytes
+        buckets_json = []
+        ratios_ok = True
+        sim_rows_w = {bits: [] for bits in _WIRE_ITEMSIZE}
+        for b in plan.buckets:
+            is_float = b.dtype.startswith(("float", "bfloat"))
+            raw32 = b.elems * 4
+            entry = {
+                "leaves": len(b.leaves),
+                "elems": b.elems,
+                "dtype": b.dtype,
+                "algorithm": b.algorithm,
+                "uncompressed_f32_bytes": raw32,
+                "wire_bytes": {},
+            }
+            if b.algorithm in ("mla", "mla_pipelined") and n_pods > 1:
+                sched = (
+                    napalg.build_mla_pipelined_schedule(
+                        n_pods, ppn, b.chunks, b.elems
+                    )
+                    if b.chunks > 1
+                    else napalg.build_mla_schedule(n_pods, ppn, b.elems)
+                )
+                entry["internode_lower_bound_f32"] = (
+                    napalg.mla_internode_lower_bound(n_pods, ppn, b.elems)
+                    * 4.0
+                )
+            else:
+                sched = None
+            for bits, it in _WIRE_ITEMSIZE.items():
+                wire = (
+                    int(math.ceil(b.elems * it)) if is_float
+                    else b.transport_bytes
+                )
+                w_entry = {"bytes": wire}
+                if sched is not None:
+                    per_chip = sched.max_internode_bytes_per_chip(
+                        float(wire)
+                    )
+                    w_entry["internode_bytes_per_chip"] = per_chip
+                    if bits != 32 and is_float and raw32 > crossover:
+                        per_chip32 = sched.max_internode_bytes_per_chip(
+                            float(raw32)
+                        )
+                        # packed width must move <= bits/32 of the f32
+                        # bytes on the wire (+1 byte/leaf ceil slack)
+                        budget = per_chip32 * (bits / 32.0)
+                        slack = len(b.leaves) * float(ppn)
+                        w_entry["ratio_vs_f32"] = per_chip / per_chip32
+                        if per_chip > budget + slack:
+                            ratios_ok = False
+                entry["wire_bytes"][bits] = w_entry
+                row = (float(wire), b.algorithm, b.chunks, b.elems)
+                if bits != 32 and is_float and wire < raw32:
+                    row = row + (float(raw32),)
+                sim_rows_w[bits].append(row)
+            buckets_json.append(entry)
+        # compute-port replay: same uniform backward window as the
+        # overlap section, priced per transport width
+        t32 = sim.simulate_bucketed_sync(sim_rows_w[32], n_pods, ppn, P)
+        k = len(sim_rows_w[32])
+        compute_times = [(i + 1) * t32 / k for i in range(k)]
+        times = {}
+        for bits in _WIRE_ITEMSIZE:
+            times[bits] = sim.simulate_bucketed_sync(
+                sim_rows_w[bits], n_pods, ppn, P,
+                compute_times=compute_times, overlap=True,
+            )
+        for bits in (4, 8):
+            rows.append(
+                (
+                    f"gradsync_compressed_int{bits}_step_speedup_pods{n_pods}",
+                    times[32] / times[bits] if times[bits] else 1.0,
+                    f"wire={_WIRE_ITEMSIZE[bits]}B/elem vs f32",
+                )
+            )
+        rows.append(
+            (
+                f"gradsync_compressed_ratios_ok_pods{n_pods}",
+                int(ratios_ok),
+                "int4<=1/8, int8<=1/4 per chip above crossover",
+            )
+        )
+        grids[f"pods{n_pods}x{ppn}"] = {
+            "n_pods": n_pods,
+            "ppn": ppn,
+            "crossover_bytes": crossover,
+            "ratios_ok": ratios_ok,
+            "step_time_s": times,
+            "step_speedup_vs_f32": {
+                bits: (times[32] / times[bits] if times[bits] else 1.0)
+                for bits in _WIRE_ITEMSIZE
+            },
+            "buckets": buckets_json,
+        }
+    payload = {
+        "bench": "gradsync_compression",
+        "machine": P.name,
+        "rows": [
+            {"name": name, "value": _json_safe(value), "derived": derived}
+            for name, value, derived in rows
+        ],
+        "grids": _json_safe(grids),
+    }
+    return rows, payload
+
+
 def collect() -> tuple[list, dict]:
     """All benchmark rows plus the JSON artifact payload."""
     rows = []
@@ -322,14 +450,23 @@ def fit_main(measurements_path: str | None) -> int:
     return ok
 
 
-def main(json_path: str | None = None) -> None:
+def main(
+    json_path: str | None = None,
+    compression_json_path: str | None = None,
+) -> None:
     rows, payload = collect()
-    for name, us, derived in rows:
+    c_rows, c_payload = compression_collect()
+    for name, us, derived in rows + c_rows:
         print(f"{name},{us:.3f},{derived}")
     if json_path:
         out = Path(json_path)
         out.parent.mkdir(parents=True, exist_ok=True)
         out.write_text(json.dumps(payload, indent=2))
+        print(f"# wrote {out}", file=sys.stderr)
+    if compression_json_path:
+        out = Path(compression_json_path)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(c_payload, indent=2))
         print(f"# wrote {out}", file=sys.stderr)
 
 
@@ -342,4 +479,7 @@ if __name__ == "__main__":
     path = None
     if "--json" in argv:
         path = argv[argv.index("--json") + 1]
-    main(path)
+    cpath = None
+    if "--compression-json" in argv:
+        cpath = argv[argv.index("--compression-json") + 1]
+    main(path, cpath)

@@ -83,6 +83,48 @@ def quick_smoke() -> int:
             f"quick_{algo}_s{size * 4},{us:.3f},"
             f"{'ok' if ok else 'MISMATCH'}"
         )
+
+    # compressed transport smoke: the fused quantize-pack engine end to
+    # end (interpret-mode Pallas kernels on CPU), int8 and packed int4
+    from repro.core import comm
+
+    size = 1 << 15
+    xs = jnp.asarray(rng.normal(size=(8, size)).astype(np.float32))
+    want = np.asarray(xs).mean(axis=0)
+    qtol = float(np.abs(np.asarray(xs)).max())
+    for bits in (8, 4):
+        policy = comm.CommPolicy(
+            algorithm="nap", mean=True, compress_bits=bits
+        )
+
+        def f(x):
+            topo = comm.Topology.from_mesh(mesh)
+            ctx = comm.CommContext(topo, policy)
+            return ctx.sync_grads({"w": x})["w"]
+
+        fn = jax.jit(
+            compat.shard_map(
+                f, mesh=mesh,
+                in_specs=P(("pod", "data")),
+                out_specs=P(("pod", "data")),
+            )
+        )
+        got = np.asarray(fn(xs))
+        # mean-of-sum error bound: group*A/qmax on the sum -> A/qmax here
+        atol = qtol / float(2 ** (bits - 1) - 1) * 1.01 + 1e-6
+        ok = bool(np.all(np.abs(got - np.tile(want, (8, 1))) <= atol))
+        failures += 0 if ok else 1
+        iters = 20
+        jax.block_until_ready(fn(xs))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(xs)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        print(
+            f"quick_compressed_int{bits}_s{size * 4},{us:.3f},"
+            f"{'ok' if ok else 'MISMATCH'}"
+        )
     return failures
 
 

@@ -41,13 +41,17 @@ Planning rules:
   bucket stay at the uneven-block lower bound
   (:func:`napalg.mla_internode_lower_bound`) — asserted in tests.
 * **transport-byte budgeting** — compressed (quantised) float leaves are
-  budgeted and dispatched at their *post-cast* transport width, not the
-  raw width, so compression genuinely moves the regime boundary.
+  budgeted and dispatched at their *packed wire* width, not the raw
+  width, so compression genuinely moves the regime boundary.  The width
+  may be fractional (0.5 B/elem for int4 nibble packing on the fused
+  Pallas transport kernels — :mod:`repro.kernels.transport`); byte
+  totals round up per leaf.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -72,9 +76,10 @@ class LeafSpec:
     """Static metadata of one gradient leaf (host-side, hashable).
 
     ``transport_itemsize`` is the per-element byte width that actually
-    crosses the network — the quantised dtype's width for compressed
-    float leaves, the native width otherwise.  All budgeting and
-    dispatch decisions use transport bytes.
+    crosses the network — the packed wire width for compressed float
+    leaves (possibly fractional: 0.5 for two int4 nibbles per byte),
+    the native width otherwise.  All budgeting and dispatch decisions
+    use transport bytes (rounded up per leaf).
     """
 
     index: int
@@ -82,7 +87,7 @@ class LeafSpec:
     itemsize: int
     dtype: str
     fusible: bool
-    transport_itemsize: int | None = None
+    transport_itemsize: int | float | None = None
 
     @property
     def nbytes(self) -> int:
@@ -91,7 +96,9 @@ class LeafSpec:
     @property
     def transport_bytes(self) -> int:
         it = self.transport_itemsize
-        return self.elems * (self.itemsize if it is None else it)
+        if it is None:
+            return self.elems * self.itemsize
+        return int(math.ceil(self.elems * it))
 
 
 @dataclass(frozen=True)

@@ -831,9 +831,19 @@ class CommPolicy:
     mean: grad-sync only — divide by the group size (data-parallel
       averaging), with integer leaves rounded rather than silently left
       as sums.
-    compress_bits: None (off) or 2..8 — quantised grad transport with
-      per-leaf max-abs scales, summed in the narrowest safe integer
-      dtype (:func:`repro.core.grad_sync.compressed_transport_dtype`).
+    compress_bits: None (off) or 2..8 — quantised grad transport on the
+      fused Pallas kernels (:mod:`repro.kernels.transport`) with
+      per-leaf max-abs scales.  8 moves ``s8`` wire bytes (1/4 of the
+      uncompressed f32 inter-node traffic); 4 packs two int4 nibbles
+      per ``u8`` byte (1/8).  The node-aware shape (exact f32
+      intra-node pre-combine, packed inter-node exchange) is documented
+      in :mod:`repro.core.grad_sync`.
+    error_feedback: carry per-chip EF residuals
+      (:mod:`repro.optim.error_feedback`) so low-bit transport
+      converges: each sync transports ``g + r`` and stores back what the
+      wire quantizer dropped.  Requires ``compress_bits``; the caller
+      threads the residual tree through
+      :meth:`CommContext.sync_grads(ef_state=...) <CommContext.sync_grads>`.
     small_threshold_bytes: fixed latency/bandwidth switch override;
       ``None`` uses the memoised model crossover (possibly ``inf``).
     fuse_small_buckets: let the bucket planner fuse same-dtype float
@@ -851,6 +861,7 @@ class CommPolicy:
     fuse_small_buckets: bool = True
     bucket_bytes: int | None = None
     pipeline_chunks: int | None = None
+    error_feedback: bool = False
 
     def __post_init__(self):
         if self.algorithm != "auto":
@@ -861,6 +872,11 @@ class CommPolicy:
             raise ValueError(
                 f"compress_bits must be None or 2..8, got "
                 f"{self.compress_bits!r}"
+            )
+        if self.error_feedback and self.compress_bits is None:
+            raise ValueError(
+                "error_feedback=True requires compress_bits (residuals "
+                "of an exact sync are identically zero)"
             )
 
 
@@ -995,13 +1011,21 @@ class CommContext:
 
     # -- gradient sync (inside shard_map) ---------------------------------
 
-    def sync_grads(self, grads, *, plan=None):
+    def sync_grads(self, grads, *, plan=None, ef_state=None):
         """Bucket-scheduled gradient allreduce of a pytree (the grad-sync
         executor under this context's policy; see
-        :mod:`repro.core.grad_sync`)."""
+        :mod:`repro.core.grad_sync`).
+
+        ``ef_state`` (optional, compressed transport only) is the
+        per-chip error-feedback residual tree
+        (:func:`repro.optim.error_feedback.ef_init`); when given, the
+        call syncs ``grads + ef_state`` and returns ``(synced, new_ef)``.
+        """
         from . import grad_sync
 
-        return grad_sync.sync_with_context(grads, self, plan=plan)
+        return grad_sync.sync_with_context(
+            grads, self, plan=plan, ef_state=ef_state
+        )
 
     def sync_grads_sharded(self, grads):
         """ZeRO-style sharded sync: reduce-scatter each leaf, return the

@@ -27,13 +27,27 @@ Two sync routes:
   optimizer partition's slice), halving per-chip inter-node bytes;
   :func:`unshard_grads` allgathers back when needed.
 
-Optional *int8 gradient compression* quantises float leaves with
-NAP-pmax-agreed max-abs scales — **per leaf**, even inside a fused
-bucket — and transports the sums in the **narrowest integer dtype that
-cannot overflow** (:func:`compressed_transport_dtype`; int16 up to
-257-way groups).  The planner budgets compressed leaves at their
-post-cast width so the regime decision sees the bytes that actually
-move.
+Optional *quantised gradient compression* (``compress_bits=8`` → int8
+wire, ``compress_bits=4`` → two int4 nibbles packed per byte) runs on
+the fused Pallas transport kernels
+(:mod:`repro.kernels.transport`): per-leaf max-abs scales are agreed in
+one NAP-pmax collective, then each transport hop is **one
+quantize-pack kernel pass** writing wire bytes directly in stripe
+layout.  The collective shape is a node-aware two-level exchange —
+exact f32 intra-node ``psum_scatter`` pre-combine, packed inter-node
+``all_to_all`` + local fold (the RS half), requantize at the group
+bound, packed inter-node ``all_gather`` + unpack (the AG half), intra
+``all_gather`` — so per-chip inter-node bytes are
+``~2 * (s * bits/8 / ppn) * (n-1)/n``: 1/4 of uncompressed f32 at 8
+bits, 1/8 at packed 4 bits.  The planner budgets compressed leaves at
+the *packed* width (``bits/8`` bytes/elem) so the regime decision sees
+the bytes that actually move, and **error-feedback residuals**
+(:mod:`repro.optim.error_feedback`, threaded via
+``sync_with_context(..., ef_state=...)``) carry each chip's
+quantization error into its next step so 4-bit transport converges.
+:func:`compressed_transport_dtype` remains the overflow-safe
+*accumulator* width for summing quantised values outside the packed
+engine (analysis + legacy callers).
 
 :class:`GradSyncConfig` is kept as a deprecated alias of
 :class:`comm.CommPolicy` (warns once): it still works everywhere, but
@@ -53,6 +67,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import bucketing, collectives, comm
 from .. import compat
+from ..kernels import transport
 
 __all__ = [
     "GradSyncConfig",
@@ -85,9 +100,9 @@ class GradSyncConfig(comm.CommPolicy):
     mean: divide by the DP group size (data-parallel averaging).  Applies
       to *every* leaf: integer gradients are averaged in float32 and
       rounded back to their dtype rather than silently left as sums.
-    compress_bits: None (off) or 8 — quantised transport with per-leaf
-      max-abs scales, summed in the narrowest safe integer dtype
-      (:func:`compressed_transport_dtype`).
+    compress_bits: None (off) or 2..8 — quantised transport on the fused
+      Pallas kernels with per-leaf max-abs scales; 8 moves int8 wire
+      bytes (1/4 of f32), 4 packs two nibbles per byte (1/8).
     small_threshold_bytes: NAP↔MLA dispatch crossover override.  ``None``
       (default) derives it from the §IV cost model for the actual grid —
       possibly ``inf`` when NAP never loses (saturated crossover).
@@ -172,48 +187,216 @@ def _agreed_absmax(parts, ctx: comm.CommContext):
     return lax.pmax(absmax, topo.intra_axes)
 
 
-def _compressed_fused_allreduce(parts, ctx: comm.CommContext, group):
+def _wire_split(topo: comm.Topology):
+    """(pre_axes, wire_axes, pre, g): the f32 pre-combine domain and the
+    packed-wire exchange domain of the compressed transport.
+
+    With a slow domain the node is the pre-combine (exact f32
+    ``psum_scatter`` over ``ppn`` lanes) and the wire crosses nodes —
+    anything else would move ``ppn``× more inter-node bytes than the
+    node-aware shape.  Degenerate grids collapse a level:
+    single-lane nodes wire over ``inter`` alone, single-node meshes wire
+    over ``intra``.  Always ``pre * g == group``.
+    """
+    if topo.n_nodes > 1 and topo.ppn > 1:
+        return topo.intra_axes, topo.inter_axes, topo.ppn, topo.n_nodes
+    if topo.n_nodes > 1:
+        return (), topo.inter_axes, 1, topo.n_nodes
+    return (), topo.intra_axes, 1, topo.ppn
+
+
+def _flat_index(axes) -> jax.Array:
+    idx = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        idx = idx * compat.axis_size(ax) + lax.axis_index(ax)
+    return idx
+
+
+def _leaf_offsets(parts) -> tuple[int, ...]:
+    offs, off = [], 0
+    for p in parts:
+        offs.append(off)
+        off += int(p.size)
+    return tuple(offs)
+
+
+def _wire_scale(x, offsets, sizes, base, wire_axes, qmax):
+    """Agreed (L,) per-leaf wire scale for the window ``[base, base+|x|)``
+    of the fused flat payload: masked absmax of ``x`` per leaf, maxed
+    over the wire group (every peer quantizes/dequantizes the same hop
+    with the same scales), divided by ``qmax``.  Leaves outside the
+    window get the 1e-30 floor — they carry no data on this hop."""
+    idx = base + jnp.arange(int(x.size), dtype=jnp.int32)
+    ax = jnp.abs(x.reshape(-1))
+    m = jnp.stack([
+        jnp.max(jnp.where((idx >= o) & (idx < o + n), ax, 0.0))
+        for o, n in zip(offsets, sizes)
+    ])
+    if wire_axes:
+        m = lax.pmax(m, wire_axes)
+    return jnp.maximum(m / qmax, 1e-30)
+
+
+def _compressed_fused_allreduce(
+    parts, ctx: comm.CommContext, group, with_err=False
+):
     """Quantised allreduce of one or more fused parts with *per-leaf*
-    scales.
+    scales, on the fused Pallas transport kernels.
 
     One shared max-abs scale across a whole fused bucket would be set by
     its largest-magnitude leaf, rounding a small-magnitude neighbour
     (layer-norm grads next to embedding grads) entirely to zero.  Each
     leaf keeps its own scale: the per-leaf absmaxes travel as one fused
-    max-allreduce, the quantised leaves are concatenated and summed in
-    one transport-dtype allreduce, and each segment is dequantised with
-    its own scale.  Returns the per-leaf float32 sums, in ``parts``
-    order.
+    max-allreduce, and every transport hop quantizes/unpacks all leaf
+    segments in a single kernel pass (leaf boundaries are static index
+    maps, not per-leaf launches).  Two-level shape — see the module
+    docstring; ``pallas_call`` count per bucket is exactly 4 regardless
+    of how many leaves the bucket fuses (quantize-stripe, unpack on
+    receive, requantize at the group bound, unpack after allgather).
+
+    Scale plumbing (``qmax = 2**(bits-1)-1``): each hop quantizes at the
+    *measured* per-leaf absmax of what actually goes on the wire — the
+    post-pre-combine stripe for hop 1, the RS-half fold for hop 2 —
+    agreed across the wire group as one fused (L,) ``pmax`` per hop.
+    The analytic bounds (stripe ≤ ``pre*A``, fold ≤ ``group*A`` with
+    ``A`` the leaf absmax) hold but are worst-case by the full fan-in;
+    quantizing at them would burn ~``log2(group)`` of the wire's
+    ``bits`` on headroom real sums never use.  Total absolute error
+    stays ≤ ``group*A/qmax`` (measured scales only shrink it).
+
+    With ``with_err=True`` the call also returns the chip's share of the
+    rounding error, *measured at the two compression points*: the hop-1
+    error ``stripe - dequant(Q(stripe))`` on the chip's own stripe and
+    the hop-2 error ``blk - dequant(Q(blk))`` on the block it owns.
+    Every coordinate's total error is split across the group with each
+    piece held by exactly one chip (stripe owner per node + one block
+    owner), so re-injecting it into next step's input (``c = g + r``)
+    compensates the full quantisation error — this is exact distributed
+    error feedback, not a per-chip model of it.  The error is computed
+    with the pure-jnp reference path (``impl="xla"``) so EF adds zero
+    ``pallas_call`` sites: the fused count stays 4 per bucket.
+
+    Returns ``(outs, scales, err)``: per-leaf float32 *sums* in
+    ``parts`` order, the (L,) hop-1 wire scales, and the flat (E,)
+    per-chip error (``None`` unless ``with_err``).
     """
     bits = ctx.policy.compress_bits
     qmax = float(2 ** (bits - 1) - 1)
-    tdtype = compressed_transport_dtype(group, bits)
-    # byte accounting: whenever the group-sum bound fits int16, the
-    # transport must genuinely be narrower than the f32 it replaces
-    # (int32 moved exactly as many bytes as uncompressed f32)
-    if int(group) * int(qmax) <= jnp.iinfo(jnp.int16).max:
-        assert tdtype.itemsize < jnp.dtype(jnp.float32).itemsize
-    scales = jnp.maximum(_agreed_absmax(parts, ctx) / qmax, 1e-30)
-    q = jnp.concatenate(
-        [
-            jnp.clip(jnp.round(p / scales[i]), -qmax, qmax).astype(tdtype)
-            for i, p in enumerate(parts)
-        ]
+    offsets = _leaf_offsets(parts)
+    flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    flat = flat.astype(jnp.float32)
+    E = int(flat.size)
+
+    def split(full):
+        outs = []
+        for i, p in enumerate(parts):
+            outs.append(full[offsets[i] : offsets[i] + p.size])
+        return outs
+
+    sizes = tuple(int(p.size) for p in parts)
+
+    if group <= 1:
+        # single chip: no wire — but keep the quantize round trip so the
+        # compression semantics (and EF residuals) match any grid size
+        scales = _wire_scale(flat, offsets, sizes, 0, (), qmax)
+        w = transport.quantize_pack(
+            flat.reshape(1, E), scales, offsets=offsets, bits=bits
+        )
+        full = transport.unpack_dequantize(
+            w, scales, offsets=offsets, bits=bits, cols=E
+        ).reshape(-1)
+        return split(full), scales, (flat - full if with_err else None)
+
+    pre_axes, wire_axes, pre, g = _wire_split(ctx.topology)
+    # ---- level 1: exact f32 pre-combine, striping the payload ----------
+    if pre > 1:
+        S = -(-E // pre)
+        if pre * S != E:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((pre * S - E,), jnp.float32)]
+            )
+        stripe = lax.psum_scatter(
+            flat.reshape(pre, S), pre_axes, scatter_dimension=0, tiled=False
+        )
+        base_stripe = _flat_index(pre_axes) * S
+    else:
+        S = E
+        stripe = flat
+        base_stripe = jnp.zeros((), jnp.int32)
+    # ---- one-pass quantize-pack of the stripe into g wire blocks -------
+    B = -(-S // g)
+    if g * B != S:
+        stripe = jnp.concatenate(
+            [stripe, jnp.zeros((g * B - S,), jnp.float32)]
+        )
+    s1 = _wire_scale(stripe, offsets, sizes, base_stripe, wire_axes, qmax)
+    w = transport.quantize_pack(
+        stripe.reshape(g, B), s1, offsets=offsets, bits=bits,
+        base=base_stripe, row_stride=B,
     )
-    summed = _one_allreduce(q, ctx)
-    outs, off = [], 0
-    for i, p in enumerate(parts):
-        seg = summed[off : off + p.size].astype(jnp.float32) * scales[i]
-        outs.append(seg)
-        off += p.size
-    return outs
+    # ---- RS half: packed all_to_all; every row lands on the same block
+    # window (base + t*B, row_stride=0), unpack + exact f32 fold --------
+    recv = lax.all_to_all(
+        w[:, None, :], wire_axes, split_axis=0, concat_axis=1, tiled=False
+    )[0]
+    block_base = base_stripe + _flat_index(wire_axes) * B
+    blk = jnp.sum(
+        transport.unpack_dequantize(
+            recv, s1, offsets=offsets, bits=bits, cols=B,
+            base=block_base, row_stride=0,
+        ),
+        axis=0,
+    )
+    # ---- requantize the reduced fold at its measured bound; AG half ----
+    s2 = _wire_scale(blk, offsets, sizes, block_base, wire_axes, qmax)
+    w2 = transport.quantize_pack(
+        blk.reshape(1, B), s2, offsets=offsets, bits=bits,
+        base=block_base, row_stride=0,
+    )
+    gathered = lax.all_gather(w2[0], wire_axes, axis=0, tiled=False)
+    stripe_sum = transport.unpack_dequantize(
+        gathered, s2, offsets=offsets, bits=bits, cols=B,
+        base=base_stripe, row_stride=B,
+    ).reshape(-1)[:S]
+    # ---- level 1 inverse: rebuild the flat sum inside the node ---------
+    if pre > 1:
+        full = lax.all_gather(
+            stripe_sum, pre_axes, axis=0, tiled=False
+        ).reshape(-1)
+    else:
+        full = stripe_sum
+    err = None
+    if with_err:
+        # this chip's share of the rounding error (see docstring): the
+        # stripe it quantised on hop 1 and the block it requantised on
+        # hop 2 (the block lies inside the stripe, so the two add).
+        # Pure-jnp decode — no extra pallas_call sites under EF.
+        vhat = transport.unpack_dequantize(
+            w, s1, offsets=offsets, bits=bits, cols=B,
+            base=base_stripe, row_stride=B, impl="xla",
+        ).reshape(-1)
+        e1 = (stripe - vhat)[:S]
+        blkhat = transport.unpack_dequantize(
+            w2, s2, offsets=offsets, bits=bits, cols=B,
+            base=block_base, row_stride=0, impl="xla",
+        )[0]
+        # padded scratch: the last stripe's block window may run past
+        # pre*S (block g*B > S); the overhang is all-zero padding
+        P = (pre - 1) * S + g * B
+        err = lax.dynamic_update_slice(
+            jnp.zeros((P,), jnp.float32), e1, (base_stripe,)
+        )
+        cur = lax.dynamic_slice(err, (block_base,), (B,))
+        err = lax.dynamic_update_slice(
+            err, cur + (blk - blkhat), (block_base,)
+        )[:E]
+    return split(full[:E]), s1, err
 
 
 def _compressed_allreduce(x, ctx: comm.CommContext, group):
     """Single-leaf quantised allreduce (float32 out; caller re-dtypes)."""
-    return _compressed_fused_allreduce([x.reshape(-1)], ctx, group)[0].reshape(
-        x.shape
-    )
+    outs, _, _ = _compressed_fused_allreduce([x.reshape(-1)], ctx, group)
+    return outs[0].reshape(x.shape)
 
 
 def _reduce_leaf(g, ctx: comm.CommContext, group):
@@ -246,11 +429,9 @@ def _reduce_leaf(g, ctx: comm.CommContext, group):
 def _leaf_specs(leaves, policy: comm.CommPolicy, group: int):
     def transport_itemsize(dt, fusible):
         if policy.compress_bits and fusible:
-            return int(
-                compressed_transport_dtype(
-                    group, policy.compress_bits
-                ).itemsize
-            )
+            # the *packed* wire width (0.5 B/elem at 4 bits, 1 B at 8):
+            # the planner must budget the bytes the fused kernels move
+            return transport.wire_itemsize(policy.compress_bits)
         return None
 
     return bucketing.leaf_specs_for(
@@ -319,42 +500,65 @@ def _bucket_ctx(ctx: comm.CommContext, bucket) -> comm.CommContext:
     )
 
 
-def _execute_plan(leaves, plan, ctx: comm.CommContext):
+def _execute_plan(leaves, plan, ctx: comm.CommContext, ef=None):
     """Issue every bucket's collective in plan (reverse-leaf) order.
 
     Buckets are data-independent; issuing them as separate collectives
     in backward-completion order is what lets XLA's latency-hiding
     scheduler overlap bucket ``b``'s transfer with the compute that
     produces bucket ``b+1`` — the in-SPMD form of bucket-level async.
+
+    ``ef`` (optional) is the flat list of per-chip error-feedback
+    residuals: compressed float buckets sync ``c = g + r`` and each
+    chip's new residual is its exact share of the transport's rounding
+    error (see :func:`_compressed_fused_allreduce` — measured at the
+    compression points, not modelled per chip); every other leaf's
+    residual passes through untouched.  Returns ``(out, new_ef)``.
     """
     group = ctx.topology.group
+    bits = ctx.policy.compress_bits
     out = [None] * len(leaves)
+    new_ef = None if ef is None else list(ef)
     for bucket in plan.buckets:
         bctx = _bucket_ctx(ctx, bucket)
-        if len(bucket.leaves) == 1:
-            i = bucket.leaves[0]
-            out[i] = _reduce_leaf(leaves[i], bctx, group)
-            continue
-        parts = [leaves[i].reshape(-1) for i in bucket.leaves]
-        is_float = jnp.issubdtype(leaves[bucket.leaves[0]].dtype, jnp.floating)
-        if ctx.policy.compress_bits and is_float:
+        idxs = bucket.leaves
+        is_float = jnp.issubdtype(leaves[idxs[0]].dtype, jnp.floating)
+        if bits and is_float:
             # fused + compressed: per-leaf scales (a shared scale would
             # zero out small-magnitude leaves), mean/dtype per segment
-            segs = _compressed_fused_allreduce(parts, bctx, group)
-            for i, seg in zip(bucket.leaves, segs):
+            parts = []
+            for i in idxs:
+                p = leaves[i].reshape(-1).astype(jnp.float32)
+                if ef is not None:
+                    p = p + ef[i].reshape(-1)
+                parts.append(p)
+            segs, scales, err = _compressed_fused_allreduce(
+                parts, bctx, group, with_err=ef is not None
+            )
+            offs = _leaf_offsets(parts)
+            for k, i in enumerate(idxs):
                 g = leaves[i]
+                if ef is not None:
+                    new_ef[i] = err[
+                        offs[k] : offs[k] + g.size
+                    ].reshape(g.shape)
+                seg = segs[k]
                 if ctx.policy.mean and group > 1:
                     seg = seg / group
                 out[i] = seg.reshape(g.shape).astype(g.dtype)
             continue
-        flat = jnp.concatenate(parts)
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = _reduce_leaf(leaves[i], bctx, group)
+            continue
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
         red = _reduce_leaf(flat, bctx, group)
         off = 0
-        for i in bucket.leaves:
+        for i in idxs:
             g = leaves[i]
             out[i] = red[off : off + g.size].reshape(g.shape)
             off += g.size
-    return out
+    return out, new_ef
 
 
 def sync_with_context(
@@ -362,6 +566,7 @@ def sync_with_context(
     ctx: comm.CommContext,
     *,
     plan: bucketing.BucketPlan | None = None,
+    ef_state: Any | None = None,
 ) -> Any:
     """Bucket-scheduled allreduce sync under a :class:`comm.CommContext`
     (the canonical entry — :meth:`comm.CommContext.sync_grads`).
@@ -370,11 +575,30 @@ def sync_with_context(
     the trainer's per-bucket issue points.  When omitted, the plan is
     solved here (host-side, cached per pytree signature x topology x
     policy).
+
+    ``ef_state`` (optional) is the per-chip error-feedback residual tree
+    (:func:`repro.optim.error_feedback.ef_init`) matching ``grads``
+    leaf-for-leaf; when given, the call returns ``(synced, new_ef)``
+    instead of just the synced tree.  Requires compressed transport —
+    residuals of an exact sync would be identically zero.
     """
     ctx.topology.require_axes()
     leaves, treedef = jax.tree.flatten(grads)
     if not leaves:
-        return grads
+        return grads if ef_state is None else (grads, ef_state)
+    ef_leaves = None
+    if ef_state is not None:
+        if not ctx.policy.compress_bits:
+            raise ValueError(
+                "ef_state given but compress_bits is None — error "
+                "feedback only applies to quantised transport"
+            )
+        ef_leaves = jax.tree.flatten(ef_state)[0]
+        if len(ef_leaves) != len(leaves):
+            raise ValueError(
+                f"error-feedback state has {len(ef_leaves)} leaves for "
+                f"{len(leaves)} gradient leaves"
+            )
     if plan is None:
         plan = _plan(leaves, ctx.policy, ctx.topology)
     else:
@@ -387,8 +611,11 @@ def sync_with_context(
                 "bucket plan does not match the gradient pytree "
                 f"(plan for {plan.signature}, got {sig})"
             )
-    out = _execute_plan(leaves, plan, ctx)
-    return jax.tree.unflatten(treedef, out)
+    out, new_ef = _execute_plan(leaves, plan, ctx, ef=ef_leaves)
+    synced = jax.tree.unflatten(treedef, out)
+    if ef_state is None:
+        return synced
+    return synced, jax.tree.unflatten(jax.tree.structure(ef_state), new_ef)
 
 
 def sync_grads_local(
@@ -412,6 +639,61 @@ def sync_grads_local(
     return sync_with_context(grads, ctx, plan=plan)
 
 
+def _compressed_reduce_scatter(flat, scale, ctx: comm.CommContext):
+    """RS half of the packed transport for one leaf: exact f32 intra
+    ``psum_scatter``, one-pass quantize-pack of the stripe, packed
+    inter-node ``all_to_all`` + unpack + f32 fold.  Returns the chip's
+    f32 shard of the *sum*, ``ceil(ceil(e/ppn)/n)`` elements in the MLA
+    stripe-block layout (bit-compatible with :func:`unshard_grads`).
+
+    The scale is agreed globally *before* the scatter (one fused NAP-max
+    collective for every leaf together), so all shards quantise on the
+    same grid — there is nothing left to re-agree post-scatter, and no
+    AG hop on this route means no second requantization either.
+    """
+    bits = ctx.policy.compress_bits
+    topo = ctx.topology
+    n, ppn = topo.n_nodes, topo.ppn
+    scales = scale.reshape(1)
+    offsets = (0,)
+    e = int(flat.size)
+    S = -(-e // ppn)
+    if ppn > 1:
+        if ppn * S != e:
+            flat = jnp.concatenate([flat, jnp.zeros((ppn * S - e,), jnp.float32)])
+        stripe = lax.psum_scatter(
+            flat.reshape(ppn, S), topo.intra_axes,
+            scatter_dimension=0, tiled=False,
+        )
+        base = _flat_index(topo.intra_axes) * S
+        s1 = scales * float(ppn)
+    else:
+        stripe = flat
+        base = jnp.zeros((), jnp.int32)
+        s1 = scales
+    B = -(-S // n)
+    if n <= 1:
+        return stripe
+    if n * B != S:
+        stripe = jnp.concatenate([stripe, jnp.zeros((n * B - S,), jnp.float32)])
+    w = transport.quantize_pack(
+        stripe.reshape(n, B), s1, offsets=offsets, bits=bits,
+        base=base, row_stride=B,
+    )
+    recv = lax.all_to_all(
+        w[:, None, :], topo.inter_axes, split_axis=0, concat_axis=1,
+        tiled=False,
+    )[0]
+    block_base = base + _flat_index(topo.inter_axes) * B
+    return jnp.sum(
+        transport.unpack_dequantize(
+            recv, s1, offsets=offsets, bits=bits, cols=B,
+            base=block_base, row_stride=0,
+        ),
+        axis=0,
+    )
+
+
 def sync_grads_sharded(
     grads: Any, *, ctx: comm.CommContext
 ) -> Any:
@@ -425,24 +707,43 @@ def sync_grads_sharded(
     shards (leaf ``i``'s shard has ``ceil(ceil(n_i/ppn)/n)`` elements,
     the MLA stripe-block layout); :func:`unshard_grads` inverts.
 
-    Compression is not supported on this route (quantised shards would
-    need their scales re-agreed post-scatter); configure
-    ``compress_bits=None``.
+    With ``compress_bits`` set, float leaves ride the packed transport's
+    RS half (:func:`_compressed_reduce_scatter`): per-leaf scales are
+    agreed in ONE fused NAP-max collective before the scatter (so every
+    shard quantises on the same grid), then each leaf moves as wire
+    bytes over the slow domain — the same ``bits/8`` per-chip inter-node
+    byte ratio as the allreduce route, at half the hops.  Integer leaves
+    stay exact.
     """
-    if ctx.policy.compress_bits:
-        raise NotImplementedError(
-            "sharded (reduce-scatter) grad sync does not support "
-            "compressed transport; use the allreduce route or set "
-            "compress_bits=None"
-        )
     ctx.topology.require_axes()
     group = ctx.topology.group
     leaves, treedef = jax.tree.flatten(grads)
+    bits = ctx.policy.compress_bits
+    qmax = float(2 ** (bits - 1) - 1) if bits else None
+    compressed = [
+        i for i, g in enumerate(leaves)
+        if bits and jnp.issubdtype(g.dtype, jnp.floating)
+    ]
+    scales = {}
+    if compressed and group > 1:
+        # ONE fused scale agreement for every compressed leaf together
+        agreed = _agreed_absmax(
+            [leaves[i].reshape(-1) for i in compressed], ctx
+        )
+        scales = {
+            i: jnp.maximum(agreed[k] / qmax, 1e-30)
+            for k, i in enumerate(compressed)
+        }
     out = []
-    for g in leaves:
+    for i, g in enumerate(leaves):
         dtype = g.dtype
         is_float = jnp.issubdtype(dtype, jnp.floating)
-        red = ctx.reduce_scatter(g.reshape(-1), op="sum")
+        if i in scales:
+            red = _compressed_reduce_scatter(
+                g.reshape(-1).astype(jnp.float32), scales[i], ctx
+            )
+        else:
+            red = ctx.reduce_scatter(g.reshape(-1), op="sum")
         if ctx.policy.mean and group > 1:
             if is_float:
                 red = red / group

@@ -37,6 +37,7 @@ __all__ = [
     "cost_smp",
     "cost_nap",
     "cost_mla",
+    "cost_mla_compressed",
     "cost_mla_pipelined",
     "cost_psum",
     "cost_reduce_scatter",
@@ -238,6 +239,28 @@ def cost_mla(s: float, n: int, ppn: int, p: MachineParams) -> float:
     """
     t_rs, t_inter, t_ag = _mla_stage_times(s, n, ppn, p)
     comp = p.gamma * s * 2.0  # local stripe reduce + per-lane RS folds
+    return t_rs + t_inter + t_ag + comp
+
+
+def cost_mla_compressed(
+    s: float, n: int, ppn: int, p: MachineParams, wire_ratio: float
+) -> float:
+    """Quantised two-level transport cost (the fused-kernel engine in
+    :mod:`repro.core.grad_sync`) for a raw ``s``-byte payload.
+
+    The intra-node pre-combine and rebuild stay exact f32 — they pay the
+    raw width — while the inter-node exchange (the RS-half all_to_all
+    and the AG-half all_gather) moves ``s * wire_ratio`` bytes
+    (``wire_ratio`` = packed wire itemsize / raw itemsize: 1/4 for int8
+    over f32, 1/8 for packed int4).  The compute port pays four fused
+    kernel passes over the payload (quantize-pack, unpack+fold,
+    requantize, unpack) instead of :func:`cost_mla`'s two reduce
+    streams.  This is the cost the dispatcher/planner quote for
+    compressed buckets — the same packed widths the executor moves.
+    """
+    t_rs, _, t_ag = _mla_stage_times(s, n, ppn, p)
+    _, t_inter, _ = _mla_stage_times(s * wire_ratio, n, ppn, p)
+    comp = p.gamma * s * 4.0
     return t_rs + t_inter + t_ag + comp
 
 

@@ -316,8 +316,14 @@ def simulate_bucketed_sync(
     """Wall-clock of a bucketed grad sync replayed with a compute port.
 
     ``buckets`` is a sequence of ``(nbytes, algorithm, chunks, elems)``
-    rows in issue order — exactly what ``BucketPlan.sim_rows()`` emits —
-    and ``compute_times[i]`` is the clock at which backward has produced
+    rows in issue order — exactly what ``BucketPlan.sim_rows()`` emits.
+    A row may carry an optional fifth element ``raw_bytes`` for
+    compressed buckets (``nbytes`` = packed wire bytes < ``raw_bytes``):
+    such rows are priced with
+    :func:`repro.core.perf_model.cost_mla_compressed` — f32 intra
+    stages at the raw width, inter exchange at the wire width, four
+    fused kernel passes on the compute side.  ``compute_times[i]`` is
+    the clock at which backward has produced
     bucket ``i``'s gradients (the compute port; defaults to all zero).
     Each bucket's collective is replayed through the event-driven
     schedule simulator (ragged stripes, pipelined chunks, donor rounds
@@ -341,10 +347,20 @@ def simulate_bucketed_sync(
         compute_times = [0.0] * len(rows)
     if len(compute_times) != len(rows):
         raise ValueError("compute_times must have one entry per bucket")
-    durations = [
-        _bucket_duration(float(nb), algo, n_nodes, ppn, p, ch, el)
-        for nb, algo, ch, el in rows
-    ]
+    durations = []
+    for row in rows:
+        nb, algo, ch, el = row[:4]
+        raw = float(row[4]) if len(row) > 4 else float(nb)
+        if raw > float(nb) and n_nodes > 1:
+            from . import perf_model as pm
+
+            durations.append(
+                pm.cost_mla_compressed(raw, n_nodes, ppn, p, float(nb) / raw)
+            )
+            continue
+        durations.append(
+            _bucket_duration(float(nb), algo, n_nodes, ppn, p, ch, el)
+        )
     if overlap:
         free = 0.0
         for ready, dur in zip(compute_times, durations):

@@ -1,3 +1,10 @@
 from .ops import flash_attention, mamba_scan, rwkv6_scan
+from .transport import quantize_pack, unpack_dequantize
 
-__all__ = ["flash_attention", "mamba_scan", "rwkv6_scan"]
+__all__ = [
+    "flash_attention",
+    "mamba_scan",
+    "rwkv6_scan",
+    "quantize_pack",
+    "unpack_dequantize",
+]

@@ -12,7 +12,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["flash_attention_ref", "rwkv6_scan_ref", "mamba_scan_ref"]
+__all__ = [
+    "flash_attention_ref",
+    "rwkv6_scan_ref",
+    "mamba_scan_ref",
+    "quantize_pack_ref",
+    "unpack_dequantize_ref",
+]
 
 
 def flash_attention_ref(
@@ -66,6 +72,78 @@ def rwkv6_scan_ref(
     xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
     _, outs = lax.scan(step, state0, xs)
     return jnp.moveaxis(outs, 0, 1)
+
+
+def _transport_scale(rows, cols, scales, offsets, base, row_stride):
+    """(R, C) per-element scale grid from the global flat-bucket index
+    ``base + i*row_stride + c`` and the static per-leaf start offsets."""
+    idx = (
+        jnp.asarray(base, jnp.int32)
+        + jnp.arange(rows, dtype=jnp.int32)[:, None] * int(row_stride)
+        + jnp.arange(cols, dtype=jnp.int32)[None, :]
+    )
+    scales = jnp.asarray(scales, jnp.float32).reshape(-1)
+    scale = jnp.full((rows, cols), scales[0], jnp.float32)
+    for l in range(1, len(offsets)):
+        scale = jnp.where(idx >= int(offsets[l]), scales[l], scale)
+    return scale
+
+
+def quantize_pack_ref(
+    x: jax.Array,
+    scales: jax.Array,
+    *,
+    offsets,
+    bits: int,
+    base=0,
+    row_stride: int = 0,
+    block: int = 256,
+) -> jax.Array:
+    """Oracle for :func:`repro.kernels.transport.quantize_pack` on an
+    already column-padded (R, C) input (C a multiple of ``block``).
+    Bit-identical wire bytes, including the split-half int4 nibble
+    layout (low nibble = element k of a block, high = k + block/2)."""
+    R, C = x.shape
+    scale = _transport_scale(R, C, scales, offsets, base, row_stride)
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax
+    ).astype(jnp.int32)
+    if bits != 4:
+        return q.astype(jnp.int8)
+    half = block // 2
+    t = q.reshape(R, C // block, block)
+    lo, hi = t[:, :, :half], t[:, :, half:]
+    packed = (lo & 0xF) | ((hi & 0xF) << 4)
+    return packed.reshape(R, C // 2).astype(jnp.uint8)
+
+
+def unpack_dequantize_ref(
+    wire: jax.Array,
+    scales: jax.Array,
+    *,
+    offsets,
+    bits: int,
+    base=0,
+    row_stride: int = 0,
+    block: int = 256,
+) -> jax.Array:
+    """Oracle inverse: wire (R, Cw) -> (R, C) f32 ``q * scale`` (padded
+    width; the public wrapper slices to the caller's ``cols``)."""
+    R, Cw = wire.shape
+    if bits == 4:
+        half = block // 2
+        b = wire.reshape(R, Cw // half, half).astype(jnp.int32)
+        lo = b & 0xF
+        hi = (b >> 4) & 0xF
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        q = jnp.concatenate([lo, hi], axis=2).reshape(R, Cw * 2)
+    else:
+        q = wire.astype(jnp.int32)
+    C = q.shape[1]
+    scale = _transport_scale(R, C, scales, offsets, base, row_stride)
+    return q.astype(jnp.float32) * scale
 
 
 def mamba_scan_ref(

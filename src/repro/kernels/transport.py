@@ -1,0 +1,266 @@
+"""Fused quantize-pack-stripe transport kernels (Pallas).
+
+The compressed grad-sync path used to quantize, cast, concat and stripe
+as separate XLA ops over the gradient before a single byte moved.  These
+kernels collapse that chain into **one pass per transport hop**: a grid
+cell reads a (1, block) tile of the fused f32 bucket, looks up the tile's
+per-leaf scale from its *global flat index* (the leaf offsets of the
+bucket — the same offsets :func:`repro.core.napalg.mla_stripe_geometry`
+charges for stripe bytes — baked in as static index maps), rounds/clips
+to the wire width and writes the wire bytes directly in stripe layout:
+
+* ``bits == 8`` (or any width 2..8 except 4): one ``int8`` byte per
+  element (``s8`` on the wire — 1/4 of f32);
+* ``bits == 4``: two int4 nibbles packed per ``uint8`` byte with a
+  split-half layout per block — wire byte ``k`` of a block carries
+  element ``k`` in its low nibble and element ``k + block/2`` in its
+  high nibble (``u8`` on the wire — 1/8 of f32).
+
+:func:`unpack_dequantize` is the exact inverse on receive.  Both follow
+the :mod:`repro.kernels.ops` convention: ``impl="pallas"`` compiles the
+kernel (``interpret=True`` on CPU so tier-1 validates everywhere) and
+``impl="xla"`` routes to the pure-jnp oracle in :mod:`repro.kernels.ref`,
+which is bit-identical on the wire bytes.
+
+Index plumbing: a wire array is (R, C) — R rows that are *blocks of a
+stripe* (or per-rank copies of one block).  Element (i, c) of the padded
+input corresponds to global flat-bucket index ``base + i*row_stride + c``
+(``base`` is traced — it depends on ``lax.axis_index`` — and
+``row_stride`` is static: the padded block length for sequential blocks,
+0 for all-to-all-received per-rank copies of the same block).  Scales are
+an (L,) traced vector (one per leaf, NAP-max agreed across the group);
+leaf start offsets are static Python ints.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = [
+    "quantize_pack",
+    "unpack_dequantize",
+    "wire_dtype",
+    "wire_itemsize",
+    "DEFAULT_BLOCK",
+]
+
+DEFAULT_BLOCK = 256
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def wire_dtype(bits: int) -> jnp.dtype:
+    """Dtype of the on-wire array: packed ``uint8`` for int4, ``int8``
+    for every other supported width (2..8)."""
+    return jnp.dtype(jnp.uint8) if bits == 4 else jnp.dtype(jnp.int8)
+
+
+def wire_itemsize(bits: int) -> float:
+    """Bytes per *element* on the wire (0.5 for packed int4, 1 else)."""
+    return 0.5 if bits == 4 else 1.0
+
+
+def _check_args(bits: int, block: int, scales_len: int, offsets) -> None:
+    if not (2 <= bits <= 8):
+        raise ValueError(f"transport bits must be in 2..8, got {bits}")
+    if block % 2 or block < 2:
+        raise ValueError(f"block must be even and >= 2, got {block}")
+    if len(offsets) != scales_len:
+        raise ValueError(
+            f"{scales_len} scales but {len(offsets)} leaf offsets"
+        )
+    if list(offsets) != sorted(int(o) for o in offsets) or offsets[0] != 0:
+        raise ValueError(f"offsets must be sorted and start at 0: {offsets}")
+
+
+def _pad_cols(x: jax.Array, block: int) -> jax.Array:
+    pad = (-x.shape[1]) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x
+
+
+def _tile_index(base, i, j, *, block: int, row_stride: int):
+    """Global flat-bucket index of every element in grid cell (i, j)."""
+    return (
+        base
+        + i * row_stride
+        + j * block
+        + lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    )
+
+
+def _tile_scale(scales_ref, idx, *, offsets):
+    """Per-element scale for a tile: leaf ``l`` spans global indices
+    ``[offsets[l], offsets[l+1])`` (static loop — L is a trace-time
+    constant, so this lowers to L-1 selects, not a gather)."""
+    scale = jnp.full(idx.shape, scales_ref[0, 0], dtype=jnp.float32)
+    for l in range(1, len(offsets)):
+        scale = jnp.where(idx >= offsets[l], scales_ref[0, l], scale)
+    return scale
+
+
+def _quant_kernel(
+    base_ref, scales_ref, x_ref, o_ref, *, offsets, bits, block, row_stride
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    idx = _tile_index(
+        base_ref[0, 0], i, j, block=block, row_stride=row_stride
+    )
+    scale = _tile_scale(scales_ref, idx, offsets=offsets)
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(
+        jnp.round(x_ref[...].astype(jnp.float32) / scale), -qmax, qmax
+    ).astype(jnp.int32)
+    if bits == 4:
+        half = block // 2
+        lo, hi = q[:, :half], q[:, half:]
+        o_ref[...] = ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.uint8)
+    else:
+        o_ref[...] = q.astype(jnp.int8)
+
+
+def _dequant_kernel(
+    base_ref, scales_ref, w_ref, o_ref, *, offsets, bits, block, row_stride
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    idx = _tile_index(
+        base_ref[0, 0], i, j, block=block, row_stride=row_stride
+    )
+    scale = _tile_scale(scales_ref, idx, offsets=offsets)
+    if bits == 4:
+        b = w_ref[...].astype(jnp.int32)
+        lo = b & 0xF
+        hi = (b >> 4) & 0xF
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        q = jnp.concatenate([lo, hi], axis=1)
+    else:
+        q = w_ref[...].astype(jnp.int32)
+    o_ref[...] = q.astype(jnp.float32) * scale
+
+
+def _scalar_2d(v) -> jax.Array:
+    return jnp.asarray(v, jnp.int32).reshape(1, 1)
+
+
+def quantize_pack(
+    x: jax.Array,
+    scales: jax.Array,
+    *,
+    offsets,
+    bits: int,
+    base=0,
+    row_stride: int = 0,
+    impl: str = "pallas",
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Quantize-and-pack ``x`` (R, C) f32 into wire bytes in one pass.
+
+    Returns (R, ceil(C/block)*block * wire_itemsize(bits)) wire bytes
+    (columns zero-padded up to a ``block`` multiple; the pad quantizes
+    to 0 and is sliced off by :func:`unpack_dequantize`).  ``scales`` is
+    the (L,) per-leaf scale vector, ``offsets`` the static leaf start
+    indices, ``base``/``row_stride`` the global-index plumbing (module
+    docstring).
+    """
+    offsets = tuple(int(o) for o in offsets)
+    scales = jnp.asarray(scales, jnp.float32).reshape(-1)
+    _check_args(bits, block, scales.shape[0], offsets)
+    xp = _pad_cols(jnp.asarray(x, jnp.float32), block)
+    R, Cp = xp.shape
+    if impl == "xla":
+        return ref.quantize_pack_ref(
+            xp, scales, offsets=offsets, bits=bits, base=base,
+            row_stride=row_stride, block=block,
+        )
+    L = scales.shape[0]
+    wblock = block // 2 if bits == 4 else block
+    out_cols = (Cp // block) * wblock
+    kern = functools.partial(
+        _quant_kernel,
+        offsets=offsets, bits=bits, block=block, row_stride=int(row_stride),
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(R, Cp // block),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, L), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, wblock), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, out_cols), wire_dtype(bits)),
+        interpret=_on_cpu() if interpret is None else interpret,
+    )(_scalar_2d(base), scales.reshape(1, L), xp)
+
+
+def unpack_dequantize(
+    wire: jax.Array,
+    scales: jax.Array,
+    *,
+    offsets,
+    bits: int,
+    cols: int,
+    base=0,
+    row_stride: int = 0,
+    impl: str = "pallas",
+    block: int = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Inverse of :func:`quantize_pack`: wire bytes (R, Cw) back to
+    (R, cols) f32 values (``q * scale``), slicing off the block padding.
+
+    ``base``/``row_stride``/``scales``/``offsets`` must describe the
+    global indices of the *received* rows — for all-to-all-received
+    per-rank copies of one block that is ``row_stride=0`` (every row
+    dequantizes with the same index window).
+    """
+    offsets = tuple(int(o) for o in offsets)
+    scales = jnp.asarray(scales, jnp.float32).reshape(-1)
+    _check_args(bits, block, scales.shape[0], offsets)
+    R, Cw = wire.shape
+    wblock = block // 2 if bits == 4 else block
+    if Cw % wblock:
+        raise ValueError(
+            f"wire width {Cw} is not a multiple of the {wblock}-byte "
+            f"wire block (bits={bits}, block={block})"
+        )
+    if impl == "xla":
+        out = ref.unpack_dequantize_ref(
+            wire, scales, offsets=offsets, bits=bits, base=base,
+            row_stride=row_stride, block=block,
+        )
+        return out[:, :cols]
+    L = scales.shape[0]
+    kern = functools.partial(
+        _dequant_kernel,
+        offsets=offsets, bits=bits, block=block, row_stride=int(row_stride),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(R, Cw // wblock),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, L), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, wblock), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (R, (Cw // wblock) * block), jnp.float32
+        ),
+        interpret=_on_cpu() if interpret is None else interpret,
+    )(_scalar_2d(base), scales.reshape(1, L), wire)
+    return out[:, :cols]

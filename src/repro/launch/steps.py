@@ -182,6 +182,15 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
     ``auto`` …) inside one ``shard_map`` — the paper's technique
     integrated end-to-end in training.  Numerically equivalent to the
     ``psum`` baseline (asserted in tests).
+
+    With ``sync_cfg.error_feedback`` the train state carries the
+    per-chip compression residuals under ``"ef"`` — build them with
+    :func:`repro.optim.error_feedback.ef_init(params, group=topo.group)
+    <repro.optim.error_feedback.ef_init>`: every leaf has a leading
+    group axis laid out over the mesh (residuals are chip-local state
+    and must never be stored replicated).  Each step syncs ``g + r``
+    through the quantised transport and stores back what the wire
+    dropped.
     """
     from ..core import comm, grad_sync
     from ..models import ShardingPolicy
@@ -202,12 +211,20 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
         params_sds, cfg=sync_cfg, topology=topo
     )
 
+    use_ef = bool(getattr(sync_cfg, "error_feedback", False))
+
     def local_step(state, batch):
         params, opt = state["params"], state["opt"]
         (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
             params, batch
         )
-        grads = ctx.sync_grads(grads, plan=bucket_plan)
+        if use_ef:
+            ef = jax.tree.map(lambda e: e[0], state["ef"])
+            grads, new_ef = ctx.sync_grads(
+                grads, plan=bucket_plan, ef_state=ef
+            )
+        else:
+            grads = ctx.sync_grads(grads, plan=bucket_plan)
         # the paper's canonical workload: single-scalar latency-bound
         # allreduce (loss mean) through the same algorithm
         if topo.inter_axes:
@@ -224,12 +241,15 @@ def make_dp_train_step(cfg, opt_cfg: OptimizerConfig, mesh, sync_cfg):
             lr=lr, betas=opt_cfg.betas, eps=opt_cfg.eps,
             weight_decay=opt_cfg.weight_decay, grad_clip=opt_cfg.grad_clip,
         )
-        return (
-            {"params": new_params, "opt": new_opt},
-            {"loss": loss, "lr": lr, **om},
-        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if use_ef:
+            # residuals are per-chip: keep the leading group axis
+            new_state["ef"] = jax.tree.map(lambda e: e[None], new_ef)
+        return new_state, {"loss": loss, "lr": lr, **om}
 
     state_spec = {"params": P(), "opt": P()}
+    if use_ef:
+        state_spec["ef"] = P(topo.axes)
     batch_spec = P(topo.axes, None)
     return compat.shard_map(
         local_step,

@@ -1,4 +1,5 @@
 from .adamw import AdamWState, adamw_init, adamw_update, global_norm
+from .error_feedback import ef_init, ef_residual
 from .schedules import make_schedule
 
 __all__ = [
@@ -6,5 +7,7 @@ __all__ = [
     "adamw_init",
     "adamw_update",
     "global_norm",
+    "ef_init",
+    "ef_residual",
     "make_schedule",
 ]

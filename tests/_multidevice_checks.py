@@ -748,8 +748,10 @@ def check_grad_sync_bucketed():
 
 
 def check_grad_sync_compressed_int16():
-    """Satellite 3: with a 16-way group the quantised transport must ride
-    int16 (half the f32 bytes) and still sum within quantisation error."""
+    """Satellite 3: the overflow-safe accumulator width must still be
+    int16 for a 16-way group (the :func:`compressed_transport_dtype`
+    contract), while the fused Pallas engine moves s8 wire bytes — the
+    packed width, never a wide integer — and sums within quant error."""
     from repro.core import grad_sync
 
     mesh = make_mesh((4, 4), ("pod", "data"))
@@ -767,8 +769,10 @@ def check_grad_sync_compressed_int16():
     )
     compiled = jax.jit(sync).lower(grads).compile()
     hlo = compiled.as_text()
-    # the payload-sized transport must appear as s16, never s32
-    ok &= "s16[" in hlo
+    # the payload-sized transport is s8 wire bytes; a wide-integer
+    # (s16/s32) payload transport would mean the packed engine regressed
+    ok &= "s8[" in hlo
+    ok &= "s16[4000]" not in hlo and "s32[4000]" not in hlo
     out = compiled(grads)
     want = np.asarray(grads["g"]).sum(axis=0)
     scale = np.abs(np.asarray(grads["g"])).max() * 16
@@ -804,6 +808,172 @@ def check_grad_sync_compressed_int16():
         tol = np.abs(arr).max() * 16 * (2.0 / 127)  # per-LEAF quant error
         ok &= np.abs(np.asarray(out[k]) - want).max() < tol
     record("grad_sync_compressed_per_leaf_scale", ok)
+
+
+def check_grad_sync_compressed_int4():
+    """Packed int4 transport: the wire must be u8 nibble-pairs (1/8 of
+    f32 — no s8, s16 or s32 payload transport), and the sum must land
+    within the 4-bit quantisation bound ``group * absmax / qmax``."""
+    from repro.core import grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(47)
+    grads = {
+        "g": jnp.asarray(rng.normal(size=(16, 4096)).astype(np.float32))
+    }
+    specs = {"g": P(("pod", "data"))}
+    cfg = grad_sync.GradSyncConfig(
+        algorithm="auto", mean=False, compress_bits=4
+    )
+    sync = grad_sync.make_grad_sync(
+        cfg, mesh, data_axes=("pod", "data"), grad_specs=specs
+    )
+    compiled = jax.jit(sync).lower(grads).compile()
+    hlo = compiled.as_text()
+    ok = "u8[" in hlo
+    # no payload-sized integer transport wider than the packed bytes
+    ok &= "s16[4096]" not in hlo and "s32[4096]" not in hlo
+    out = compiled(grads)
+    arr = np.asarray(grads["g"])
+    want = arr.sum(axis=0)
+    bound = np.abs(arr).max() * 16 / 7.0  # group * A / qmax(int4)
+    err = np.abs(np.asarray(out["g"]) - want).max()
+    ok &= err <= bound
+    record("grad_sync_compressed_int4", ok, err=err, bound=bound)
+
+
+def check_comm_sharded_grad_sync_compressed():
+    """Satellite: the ZeRO route rides the same quantised transport —
+    shards keep the stripe-block layout/shape and unshard back to the
+    allreduce-route result within the shared quantisation bound."""
+    from repro.core import comm, grad_sync
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    rng = np.random.default_rng(51)
+    for bits in (8, 4):
+        policy = comm.CommPolicy(mean=True, compress_bits=bits)
+        ctx = comm.CommContext(comm.Topology.from_mesh(mesh), policy)
+        grads = {
+            "w": jnp.asarray(rng.normal(size=(16, 37)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32)),
+        }
+        specs = {k: P(("pod", "data")) for k in grads}
+
+        def sharded_roundtrip(g):
+            like = jax.tree.map(
+                lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), g
+            )
+            return grad_sync.unshard_grads(
+                ctx.sync_grads_sharded(g), like, ctx=ctx
+            )
+
+        out_sh = jax.jit(
+            compat.shard_map(
+                sharded_roundtrip, mesh=mesh,
+                in_specs=(specs,), out_specs=specs,
+            )
+        )(grads)
+        qmax = 2.0 ** (bits - 1) - 1
+        ok = True
+        for k, g in grads.items():
+            arr = np.asarray(g)
+            want = arr.mean(axis=0)
+            # mean of a sum quantised at the group bound
+            bound = np.abs(arr).max() / qmax
+            err = np.abs(np.asarray(out_sh[k]) - want).max()
+            ok &= err <= bound
+        # shard shapes keep the uncompressed stripe-block layout
+        shard_shapes = jax.eval_shape(
+            compat.shard_map(
+                lambda g: ctx.sync_grads_sharded(g),
+                mesh=mesh, in_specs=(specs,),
+                out_specs={k: P(("pod", "data")) for k in grads},
+            ),
+            grads,
+        )
+        for k, g in grads.items():
+            elems = int(np.prod(g.shape[1:]))
+            stripe = -(-elems // 4)  # ceil(e / ppn)
+            want = -(-stripe // 4)  # ceil(stripe / n): the block size
+            ok &= shard_shapes[k].shape == (16 * want,)
+        record(f"comm_sharded_grad_sync_compressed_int{bits}", ok)
+
+
+def check_dp_training_ef_convergence():
+    """Tentpole acceptance: tiny-LM training with 4-bit error-feedback
+    transport must track the uncompressed loss within tolerance after
+    ``n_steps``, and be strictly worse without error feedback.
+
+    The horizon has to be long enough for the task to actually learn
+    (the synthetic zipf+motif data starts at its unigram entropy floor;
+    over a few steps every transport looks identical) — at 120 steps the
+    uncompressed run has left the plateau and transport fidelity is
+    visible in the loss.  Without EF the quantisation error perturbs
+    every update and the trajectory deviates (on this workload it
+    overshoots *below* the exact loss — deviation, not improvement:
+    gradient noise is extra step size here); with EF the dropped error
+    re-enters the next step and the compressed trajectory stays near the
+    exact one.  Asserted both at the tail (mean of the last 10 losses)
+    and along the whole trajectory (mean |loss_t - base_t|)."""
+    import dataclasses
+
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import OptimizerConfig
+    from repro.core.grad_sync import GradSyncConfig
+    from repro.launch.steps import make_dp_train_step
+    from repro.models import build_model
+    from repro.optim import adamw_init, ef_init
+    from repro.data import SyntheticLM
+
+    mesh = make_mesh((4, 4), ("pod", "data"))
+    cfg = dataclasses.replace(reduced(ARCHS["minicpm-2b"]), dtype="float32")
+    opt_cfg = OptimizerConfig(lr=1e-2, schedule="constant", warmup_steps=1)
+    model = build_model(cfg)
+    params0 = jax.jit(model.init)(jax.random.PRNGKey(0))
+    data = SyntheticLM(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=16, seed=3,
+        mesh=mesh, batch_axes=("pod", "data"),
+    )
+    n_steps = 120
+
+    def run(sync_cfg):
+        step = jax.jit(make_dp_train_step(cfg, opt_cfg, mesh, sync_cfg))
+        state = {"params": params0, "opt": adamw_init(params0)}
+        if sync_cfg.error_feedback:
+            state["ef"] = ef_init(params0, group=16)
+        ls = []
+        for s in range(n_steps):
+            state, m = step(state, data.batch(s))
+            ls.append(float(m["loss"]))
+        return ls
+
+    base = run(GradSyncConfig(algorithm="nap", mean=True))
+    ef4 = run(
+        GradSyncConfig(
+            algorithm="nap", mean=True, compress_bits=4,
+            error_feedback=True,
+        )
+    )
+    raw4 = run(GradSyncConfig(algorithm="nap", mean=True, compress_bits=4))
+    tail = lambda ls: float(np.mean(ls[-10:]))  # noqa: E731
+    gap_ef = abs(tail(ef4) - tail(base))
+    gap_raw = abs(tail(raw4) - tail(base))
+    dev_ef = float(np.mean(np.abs(np.array(ef4) - np.array(base))))
+    dev_raw = float(np.mean(np.abs(np.array(raw4) - np.array(base))))
+    learned = tail(base) < base[0] - 0.5  # the task left its plateau
+    ok = (
+        all(np.isfinite(ef4))
+        and learned
+        and gap_ef < 0.15 * tail(base)
+        and gap_raw > gap_ef
+        and dev_raw > 1.4 * dev_ef
+    )
+    record(
+        "dp_train_ef_convergence", ok,
+        base_tail=tail(base), ef4_tail=tail(ef4), raw4_tail=tail(raw4),
+        gap_ef=gap_ef, gap_raw=gap_raw, dev_ef=dev_ef, dev_raw=dev_raw,
+        base=base[::20], ef4=ef4[::20], raw4=raw4[::20],
+    )
 
 
 def check_dp_training_nap_equals_psum():
@@ -1123,6 +1293,9 @@ def main():
     check_grad_sync_pipelined()
     check_grad_sync_bucketed()
     check_grad_sync_compressed_int16()
+    check_grad_sync_compressed_int4()
+    check_comm_sharded_grad_sync_compressed()
+    check_dp_training_ef_convergence()
     check_dp_training_nap_equals_psum()
     check_nap_extensions()
     check_comm_context_equivalence()

@@ -372,3 +372,24 @@ def test_benchmark_payload_has_overlap_tables():
         assert b["internode_bytes_per_chip"] == pytest.approx(
             b["internode_lower_bound"]
         )
+
+
+def test_benchmark_compression_payload_ratios():
+    """BENCH_6.json acceptance: per-chip inter-node bytes at packed int4
+    are 1/8 of uncompressed f32 (int8: 1/4) on every float MLA bucket
+    above the crossover, and the payload carries step-time deltas."""
+    import benchmarks.gradsync as gs
+
+    rows, payload = gs.compression_collect()
+    assert payload["bench"] == "gradsync_compression"
+    for grid, table in payload["grids"].items():
+        assert table["ratios_ok"], grid
+        for b in table["buckets"]:
+            w4 = b["wire_bytes"][4]
+            if "ratio_vs_f32" in w4:
+                assert w4["ratio_vs_f32"] == pytest.approx(0.125, abs=1e-3)
+                assert b["wire_bytes"][8]["ratio_vs_f32"] == pytest.approx(
+                    0.25, abs=1e-3
+                )
+        assert set(table["step_speedup_vs_f32"]) == {4, 8, 16, 32}
+    assert any("step_speedup" in name for name, _, _ in rows)

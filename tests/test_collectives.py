@@ -78,6 +78,10 @@ _EXPECTED = [
     "grad_sync_pinned_plan",
     "grad_sync_compressed_int16",
     "grad_sync_compressed_per_leaf_scale",
+    "grad_sync_compressed_int4",
+    "comm_sharded_grad_sync_compressed_int8",
+    "comm_sharded_grad_sync_compressed_int4",
+    "dp_train_ef_convergence",
     "dp_train_nap_equals_psum",
     "nap_allgather",
     "nap_reduce_scatter",
