@@ -1,0 +1,74 @@
+"""Static analysis for the collective engine tournament.
+
+Two passes prove a registered engine correct *before* it races:
+
+1. **Schedule verifier** (:mod:`repro.analysis.schedule_verifier`) —
+   given any built ``NapSchedule``/``P2PSchedule``, statically proves
+   match-completeness, deadlock-freedom, exactly-once reduction
+   correctness and byte-accounting equality against the engine's
+   declared inter-node bound.
+2. **HLO wire-lint** (:mod:`repro.analysis.hlo_lint`) — rule-based
+   linter over compiled-step HLO: wire-dtype rules for compressed
+   transport (no ``f32``/wide-int payloads on a compressed wire),
+   collective-count budgets, and a no-silent-recompile rule.
+
+Quickstart::
+
+    from repro.core import comm
+    from repro.analysis import verify_schedule
+
+    # verify one schedule directly
+    sched = comm.engine_schedule("mla", n_nodes=5, ppn=4, elems=193)
+    report = verify_schedule(sched, engine="mla", elems=193)
+    assert report.ok, report.violations
+
+    # or verify a registered engine over its grid (what
+    # register_engine does automatically under REPRO_VERIFY_ON_REGISTER)
+    comm.verify_engine("mla", n_nodes=5, ppn=4, elems=193)
+
+    # or sweep everything and emit the BENCH_7 verification table:
+    #   PYTHONPATH=src python -m repro.analysis --json reports/BENCH_7.json
+
+This package imports neither ``jax`` nor ``repro.core.comm`` at module
+scope: the registry calls *into* the verifier on registration, and the
+``__main__`` driver must be able to set ``XLA_FLAGS`` before anything
+pulls in jax.
+"""
+
+from .schedule_verifier import (  # noqa: F401
+    GRID_MATRIX,
+    PAYLOAD_ELEMS,
+    REGISTER_GRIDS,
+    RULES,
+    VerificationReport,
+    Violation,
+    build_spec_schedule,
+    verify_schedule,
+    verify_spec,
+    verify_spec_grid,
+)
+from .hlo_lint import (  # noqa: F401
+    LintViolation,
+    collective_ops,
+    lint_collective_counts,
+    lint_compressed_wire,
+    lint_stable_lowering,
+)
+
+__all__ = [
+    "GRID_MATRIX",
+    "PAYLOAD_ELEMS",
+    "REGISTER_GRIDS",
+    "RULES",
+    "VerificationReport",
+    "Violation",
+    "build_spec_schedule",
+    "verify_schedule",
+    "verify_spec",
+    "verify_spec_grid",
+    "LintViolation",
+    "collective_ops",
+    "lint_collective_counts",
+    "lint_compressed_wire",
+    "lint_stable_lowering",
+]

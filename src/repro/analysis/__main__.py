@@ -1,0 +1,191 @@
+"""Grid-sweep verification driver: ``python -m repro.analysis``.
+
+Runs both static-analysis passes and emits the ``BENCH_7.json``
+verification table:
+
+1. **Schedule sweep** — every registered engine x the grid matrix
+   (degenerate ``n=1``/``ppn=1`` grids, prime node counts, ragged
+   payloads, chunk depths) through the four schedule-verifier passes.
+   Engines without a schedule builder (the native psum fallbacks) are
+   reported as ``native`` rows — a single native collective has no
+   message schedule to verify.
+2. **HLO wire-lint** — compiles the compressed fused-bucket gradient
+   sync on 8 virtual CPU devices and runs the wire-dtype,
+   collective-count and stable-lowering rules over the jaxpr and the
+   optimized HLO.
+
+Exits non-zero on any violation, so CI can gate on it::
+
+    PYTHONPATH=src python -m repro.analysis --json reports/BENCH_7.json
+
+``--skip-hlo`` runs only the (fast, jax-free) schedule sweep;
+``--skip-schedules`` only the lint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# the HLO pass compiles on virtual CPU devices: the flag must be set
+# before anything imports jax, which is why this module (and the whole
+# analysis package) keeps jax out of module scope
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def run_schedule_sweep() -> dict:
+    from repro.core import comm
+
+    from . import schedule_verifier as sv
+
+    rows = []
+    per_engine: dict[str, dict] = {}
+    for key in sorted(comm.registered_engines()):
+        collective, name = key.split(":", 1)
+        spec = comm.get_engine(name, collective)
+        reports = sv.verify_spec_grid(spec)
+        n_bad = sum(1 for r in reports if not r.ok)
+        n_native = sum(
+            1 for r in reports if any(n.startswith("native") for n in r.notes)
+        )
+        n_skipped = sum(
+            1 for r in reports if any(n.startswith("skipped") for n in r.notes)
+        )
+        per_engine[key] = {
+            "cells": len(reports),
+            "verified": len(reports) - n_bad - n_native - n_skipped,
+            "native": n_native,
+            "skipped_below_min_grid": n_skipped,
+            "violations": n_bad,
+        }
+        rows.extend(r.to_row() for r in reports)
+        status = "FAIL" if n_bad else "ok"
+        print(
+            f"  {key:28s} {per_engine[key]['verified']:4d} verified "
+            f"{n_native:4d} native {n_skipped:4d} skipped "
+            f"{n_bad:3d} violations  {status}"
+        )
+    n_violations = sum(e["violations"] for e in per_engine.values())
+    return {
+        "grid_matrix": [list(g) for g in sv.GRID_MATRIX],
+        "payload_elems": list(sv.PAYLOAD_ELEMS),
+        "engines": per_engine,
+        "cells": len(rows),
+        "violations": n_violations,
+        "rows": rows,
+    }
+
+
+def run_hlo_lint() -> dict:
+    """Compile the compressed fused-bucket grad sync and lint its wire."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core import comm, grad_sync
+    from repro.launch.mesh import make_mesh
+
+    from . import hlo_lint
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    shapes = [(64 + 32 * i,) for i in range(3)]
+    payload_elems = sum(s[0] for s in shapes)
+
+    def compiled(bits):
+        policy = comm.CommPolicy(
+            algorithm="nap", mean=True, compress_bits=bits
+        )
+
+        def f(*leaves):
+            topo = comm.Topology.from_mesh(mesh)
+            ctx = comm.CommContext(topo, policy)
+            plan = grad_sync.plan_for_tree(
+                [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes],
+                cfg=policy, topology=topo,
+            )
+            out = grad_sync.sync_with_context(list(leaves), ctx, plan=plan)
+            return jnp.concatenate(out)
+
+        args = [jnp.zeros(s, jnp.float32) for s in shapes]
+        g = compat.shard_map(
+            f, mesh=mesh,
+            in_specs=tuple(P() for _ in args),
+            out_specs=P(),
+            check_vma=False,
+        )
+        return g, args
+
+    rows = []
+
+    def record(context: str, violations) -> None:
+        for v in violations:
+            rows.append({"context": context, **v.to_row()})
+        status = "FAIL" if violations else "ok"
+        print(f"  {context:42s} {len(violations):2d} violations  {status}")
+
+    for bits in (8, 4):
+        g, args = compiled(bits)
+        jaxpr = str(jax.make_jaxpr(g)(*args))
+        record(
+            f"jaxpr[bits={bits}] pallas_call budget",
+            hlo_lint.lint_collective_counts(jaxpr, {"pallas_call": 4}),
+        )
+        hlo = jax.jit(g).lower(*args).compile().as_text()
+        record(
+            f"hlo[bits={bits}] compressed wire",
+            hlo_lint.lint_compressed_wire(
+                hlo, bits=bits, payload_elems=payload_elems, ppn=4
+            ),
+        )
+    g, args = compiled(8)
+    record(
+        "stable lowering (no silent recompile)",
+        hlo_lint.lint_stable_lowering(g, *args),
+    )
+    return {"rows": rows, "violations": len(rows)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis", description=__doc__
+    )
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the BENCH_7 verification table here")
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="schedule sweep only (fast, jax-free)")
+    ap.add_argument("--skip-schedules", action="store_true",
+                    help="HLO lint only")
+    args = ap.parse_args(argv)
+
+    report: dict = {"bench": "BENCH_7", "ok": True}
+    if not args.skip_schedules:
+        print("schedule verification sweep:")
+        report["schedule_verification"] = run_schedule_sweep()
+    if not args.skip_hlo:
+        print("HLO wire lint:")
+        report["hlo_lint"] = run_hlo_lint()
+
+    n_violations = sum(
+        report.get(k, {}).get("violations", 0)
+        for k in ("schedule_verification", "hlo_lint")
+    )
+    report["ok"] = n_violations == 0
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.json}")
+
+    if not report["ok"]:
+        print(f"FAILED: {n_violations} violation(s)")
+        return 1
+    print("all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,257 @@
+"""Rule-based lint over compiled-step HLO (and jaxpr text).
+
+Promotes the structural parser of :mod:`repro.launch.hlo_analysis` into
+reusable wire rules, so HLO regressions live in one place instead of
+ad-hoc regexes per test:
+
+* :func:`lint_compressed_wire` — a ``compress_bits``-configured
+  gradient sync must put the compressed dtype (``s8`` at 5-8 bits,
+  packed ``u8`` below) on its collectives and must never move a
+  wide-integer or payload-sized float across the wire.
+* :func:`lint_collective_counts` — op-count budgets (e.g. the fused
+  bucket path stays exactly 4 ``pallas_call`` sites per bucket no
+  matter how many leaves it fuses).
+* :func:`lint_stable_lowering` — lowering the same function twice must
+  produce identical text; a divergence means tracing captures varying
+  state and the train loop would silently recompile every step.
+
+Rules return a list of :class:`LintViolation` (empty = clean) so a
+driver can aggregate them into a report; the ``assert_clean`` helper
+turns them into one readable failure for test use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..launch.hlo_analysis import CollectiveOp, iter_collectives  # noqa: F401
+
+__all__ = [
+    "LintViolation",
+    "collective_ops",
+    "lint_compressed_wire",
+    "lint_collective_counts",
+    "lint_stable_lowering",
+    "assert_clean",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    """One lint rule violation on a compiled module."""
+
+    rule: str
+    message: str
+
+    def to_row(self) -> dict:
+        return {"rule": self.rule, "message": self.message}
+
+
+def collective_ops(hlo_text: str) -> list[CollectiveOp]:
+    """All collective instructions of a module (while bodies included)."""
+    return list(iter_collectives(hlo_text))
+
+
+#: integer dtypes wider than the widest compressed wire word — none of
+#: these ever belongs on a compressed transport collective
+_WIDE_INT = frozenset({"s16", "u16", "s32", "u32", "s64", "u64"})
+_WIDE_FLOAT = frozenset({"f32", "f64"})
+
+
+def expected_wire_dtype(bits: int) -> str:
+    """The on-wire dtype of ``bits``-bit compressed transport: ``s8``
+    holds one 5-8 bit word per byte, ``u8`` packs two <=4-bit nibbles."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"compressed transport is 2..8 bits, got {bits}")
+    return "s8" if bits >= 5 else "u8"
+
+
+def _is_intra_node(c: CollectiveOp, ppn: int | None) -> bool:
+    """Whether every replica group of ``c`` stays inside one node
+    (devices grouped as ``device // ppn``).  Iota-format groups (not
+    parsed into explicit lists) are conservatively treated as
+    inter-node."""
+    if ppn is None or not c.replica_groups:
+        return False
+    return all(
+        len({d // ppn for d in g}) <= 1 for g in c.replica_groups
+    )
+
+
+def lint_compressed_wire(
+    hlo_text: str,
+    *,
+    bits: int,
+    payload_elems: int | None = None,
+    ppn: int | None = None,
+) -> list[LintViolation]:
+    """Wire-dtype rules for a ``bits``-bit compressed collective step.
+
+    * the compressed dtype must actually appear on a collective (a
+      compiled step that quantizes but ships f32 is silently paying the
+      full wire cost);
+    * no collective moves a wide-integer payload (``s32`` is legal for
+      Pallas index math *outside* collectives, so the rule is scoped to
+      collective shapes — plus a whole-text ``s16``/payload-sized
+      ``s32`` screen matching the historical regression);
+    * with ``payload_elems``, no *inter-node* collective moves a
+      payload-sized float tensor (the uncompressed-gradient leak).
+      Compression pays on the slow domain only: with ``ppn`` given,
+      collectives whose replica groups stay inside one node (the intra
+      RS/AG phases, which are f32 by design) are exempt.
+    """
+    out: list[LintViolation] = []
+    want = expected_wire_dtype(bits)
+    cols = collective_ops(hlo_text)
+
+    if cols:
+        if not any(want in c.dtypes for c in cols):
+            out.append(
+                LintViolation(
+                    "wire-dtype",
+                    f"no collective carries the {want} wire dtype "
+                    f"expected for {bits}-bit compressed transport "
+                    f"({len(cols)} collectives inspected)",
+                )
+            )
+        for c in cols:
+            for d in c.dtypes:
+                if d in _WIDE_INT:
+                    out.append(
+                        LintViolation(
+                            "wire-dtype",
+                            f"collective {c.name} ({c.op}) in "
+                            f"{c.computation} moves a wide-integer "
+                            f"{d} payload: {c.shape}",
+                        )
+                    )
+                elif (
+                    d in _WIDE_FLOAT
+                    and payload_elems is not None
+                    and c.elems >= payload_elems
+                    and not _is_intra_node(c, ppn)
+                ):
+                    out.append(
+                        LintViolation(
+                            "wire-dtype",
+                            f"collective {c.name} ({c.op}) in "
+                            f"{c.computation} moves a payload-sized "
+                            f"{d} tensor ({c.elems} elems >= "
+                            f"{payload_elems}): uncompressed wire",
+                        )
+                    )
+    elif f"{want}[" not in hlo_text:
+        # no parseable collectives (e.g. jaxpr text or single-device
+        # lowering): fall back to the text-level dtype screen
+        out.append(
+            LintViolation(
+                "wire-dtype",
+                f"{want}[ absent from the lowering text (expected for "
+                f"{bits}-bit compressed transport)",
+            )
+        )
+
+    # whole-text screens, independent of collective parsing: s16 has no
+    # legitimate producer anywhere in these modules, and a payload-sized
+    # s32 tensor is the classic unpacked-wire regression
+    if "s16[" in hlo_text:
+        out.append(
+            LintViolation(
+                "wire-dtype",
+                "s16[ appears in the lowering: some wire word was "
+                "widened to 16-bit",
+            )
+        )
+    if payload_elems is not None and f"s32[{payload_elems}]" in hlo_text:
+        out.append(
+            LintViolation(
+                "wire-dtype",
+                f"s32[{payload_elems}] appears in the lowering: a "
+                "payload-sized unpacked integer tensor survived "
+                "(index math is fine, payload-sized s32 is not)",
+            )
+        )
+    return out
+
+
+def lint_collective_counts(
+    text: str, budgets: dict[str, int | tuple[int, int]]
+) -> list[LintViolation]:
+    """Op-count budgets over HLO or jaxpr text.
+
+    ``budgets`` maps an op key to an exact expected count or an
+    inclusive ``(lo, hi)`` range.  Keys naming HLO collectives
+    (``all-reduce`` etc.) are counted on the parsed module (async
+    ``-start`` forms folded in); any other key is a plain substring
+    count, which is how ``pallas_call`` sites are counted in jaxpr
+    text.
+    """
+    out: list[LintViolation] = []
+    cols = None
+    for key, budget in budgets.items():
+        lo, hi = budget if isinstance(budget, tuple) else (budget, budget)
+        if key in ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute"):
+            if cols is None:
+                cols = collective_ops(text)
+            count = sum(1 for c in cols if c.kind == key)
+        else:
+            count = text.count(key)
+        if not lo <= count <= hi:
+            want = str(lo) if lo == hi else f"[{lo}, {hi}]"
+            out.append(
+                LintViolation(
+                    "collective-count",
+                    f"{count} x {key!r}, budget {want}",
+                )
+            )
+    return out
+
+
+def lint_stable_lowering(fn, *args, **kwargs) -> list[LintViolation]:
+    """Lower ``fn`` twice and require byte-identical text.
+
+    A function whose trace captures varying state (a closure counter, a
+    fresh constant per call) lowers differently each time — under
+    ``jax.jit`` that is a silent recompile on every train step.  jax is
+    imported lazily so the rule module stays import-light.
+    """
+    import jax
+
+    def _lower_once():
+        # a fresh wrapper object per lowering defeats the jit trace
+        # cache (keyed on function identity) so fn really traces twice
+        def _w(*a, **k):
+            return fn(*a, **k)
+
+        return jax.jit(_w).lower(*args, **kwargs).as_text()
+
+    first = _lower_once()
+    second = _lower_once()
+    if first == second:
+        return []
+    diff_at = next(
+        (i for i, (a, b) in enumerate(zip(first, second)) if a != b),
+        min(len(first), len(second)),
+    )
+    ctx = first[max(0, diff_at - 60) : diff_at + 60].strip()
+    return [
+        LintViolation(
+            "stable-lowering",
+            "lowering the same function twice produced different text "
+            f"(first divergence near char {diff_at}: ...{ctx}...) — "
+            "the traced function captures varying state and would "
+            "silently recompile every step",
+        )
+    ]
+
+
+def assert_clean(violations: list[LintViolation], context: str = "") -> None:
+    """Raise ``AssertionError`` listing every violation (test helper)."""
+    if violations:
+        head = f"{context}: " if context else ""
+        raise AssertionError(
+            head
+            + f"{len(violations)} lint violation(s):\n"
+            + "\n".join(f"  [{v.rule}] {v.message}" for v in violations)
+        )

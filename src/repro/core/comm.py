@@ -46,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 import types
 import warnings
 from typing import Callable, NamedTuple
@@ -64,6 +65,7 @@ __all__ = [
     "registered_engines",
     "find_engine",
     "engine_schedule",
+    "verify_engine",
     "select_engine",
     "CommPolicy",
     "CommContext",
@@ -416,6 +418,7 @@ def register_engine(
     pipelined_variant: str | None = None,
     legacy: Callable | None = None,
     override: bool = False,
+    verify: bool = True,
 ):
     """Register a collective engine (usable directly or as a decorator).
 
@@ -432,6 +435,16 @@ def register_engine(
 
     replacing the former edits across four files (``ALGORITHMS``,
     ``_MLA_OPS``, ``_LARGE_COSTS``, ``select_algorithm``).
+
+    **Verify-on-register.**  When ``REPRO_VERIFY_ON_REGISTER`` is set in
+    the environment (the test suite sets it), every registration with a
+    schedule builder is statically verified by
+    :mod:`repro.analysis.schedule_verifier` over a small grid matrix —
+    match-completeness, deadlock-freedom, exactly-once reduction and
+    byte accounting — before it becomes visible; a failing engine is
+    rolled back out of the registry and the registration raises with the
+    violation list.  ``verify=False`` opts a registration out (for
+    deliberately exotic schedules carrying their own proofs).
     """
     if collective not in _REGISTRY:
         raise ValueError(
@@ -460,6 +473,12 @@ def register_engine(
             legacy=legacy,
         )
         _REGISTRY[collective][name] = spec
+        if verify and _verify_on_register_enabled():
+            try:
+                _verify_spec_quick(spec)
+            except Exception:
+                _REGISTRY[collective].pop(name, None)
+                raise
         if legacy is not None and collective == "allreduce":
             _LEGACY_TABLE[name] = legacy
         return execute_fn
@@ -546,6 +565,97 @@ def engine_schedule(
     if spec.ragged:
         return spec.build_schedule(n_nodes, ppn, elems)
     return spec.build_schedule(n_nodes, ppn)
+
+
+def _verify_on_register_enabled() -> bool:
+    return os.environ.get("REPRO_VERIFY_ON_REGISTER", "").lower() in (
+        "1", "true", "yes",
+    )
+
+
+def _verify_spec_quick(spec: EngineSpec) -> None:
+    """The verify-on-register gate: sweep the registration grids and
+    raise (so the caller rolls the registry back) on any violation."""
+    from ..analysis import schedule_verifier as _sv
+
+    bad = []
+    for n, ppn in _sv.REGISTER_GRIDS:
+        for elems in (None, 19):
+            r = _sv.verify_spec(
+                spec, n, ppn, elems=elems, chunks=2 if spec.chunked else 1
+            )
+            if not r.ok:
+                bad.append(r)
+    if bad:
+        lines = [
+            f"  ({r.n_nodes}x{r.ppn}, elems={r.elems}) "
+            f"[{v.rule}] {v.message}"
+            for r in bad
+            for v in r.violations
+        ]
+        raise ValueError(
+            f"{spec.collective} engine {spec.name!r} failed static "
+            "verification on registration:\n" + "\n".join(lines)
+        )
+
+
+def verify_engine(
+    name: str,
+    topology: Topology | None = None,
+    *,
+    n_nodes: int | None = None,
+    ppn: int | None = None,
+    elems: int | None = None,
+    chunks: int = 1,
+    grids=None,
+    raise_on_violation: bool = True,
+):
+    """Statically verify a registered engine's schedules.
+
+    The four passes of :mod:`repro.analysis.schedule_verifier` — match
+    completeness, deadlock-freedom, exactly-once reduction correctness
+    and byte-accounting equality against the engine's declared bound —
+    run over one grid (a ``topology`` or ``n_nodes``/``ppn``) or a grid
+    matrix (``grids``; defaults to the registration grids).  Returns the
+    list of :class:`repro.analysis.VerificationReport` rows; raises
+    ``ValueError`` listing every violation unless
+    ``raise_on_violation=False``.
+
+    New engines (ROADMAP open item 2) must pass this before entering
+    the tournament — the test suite enforces it via verify-on-register.
+    """
+    from ..analysis import schedule_verifier as _sv
+
+    spec = find_engine(name)
+    if topology is not None:
+        grid_list = [(topology.n_nodes, topology.ppn)]
+    elif n_nodes is not None and ppn is not None:
+        grid_list = [(n_nodes, ppn)]
+    elif grids is not None:
+        grid_list = list(grids)
+    else:
+        grid_list = list(_sv.REGISTER_GRIDS)
+
+    reports = [
+        _sv.verify_spec(
+            spec, n, p, elems=elems,
+            chunks=chunks if chunks > 1 else (2 if spec.chunked else 1),
+        )
+        for n, p in grid_list
+    ]
+    bad = [r for r in reports if not r.ok]
+    if bad and raise_on_violation:
+        lines = [
+            f"  ({r.n_nodes}x{r.ppn}, elems={r.elems}) "
+            f"[{v.rule}] {v.message}"
+            for r in bad
+            for v in r.violations
+        ]
+        raise ValueError(
+            f"engine {name!r} failed static verification:\n"
+            + "\n".join(lines)
+        )
+    return reports
 
 
 class Decision(NamedTuple):

@@ -75,6 +75,8 @@ __all__ = [
     "build_mla_pipelined_schedule",
     "build_mla_rs_schedule",
     "build_mla_ag_schedule",
+    "ScheduleMessage",
+    "iter_messages",
     "ragged_splits",
     "chunk_offsets",
     "chunk_alignment",
@@ -405,6 +407,57 @@ class P2PSchedule:
                 if src // self.ppn != dst // self.ppn:
                     sends[src] += f * s
         return float(sends.max(initial=0.0))
+
+
+@dataclass(frozen=True)
+class ScheduleMessage:
+    """One send/recv endpoint pair of any schedule, in a uniform shape.
+
+    The normal form the static analyses (:mod:`repro.analysis`) iterate:
+    NAP steps flatten their donor rounds into ``(step, round)`` positions
+    with ``frac=1.0`` (every NAP message carries the full payload);
+    P2P steps broadcast their scalar/ragged fractions per pair.  ``inter``
+    is the slow-domain flag (``src`` and ``dst`` live on different
+    nodes), derived once here so every consumer shares one definition.
+    """
+
+    step: int
+    round: int
+    src: int
+    dst: int
+    frac: float
+    chunk: int
+    combine: bool
+    inter: bool
+
+
+def iter_messages(schedule):
+    """Yield every message of a :class:`NapSchedule` or
+    :class:`P2PSchedule` as a :class:`ScheduleMessage`.
+
+    The single endpoint-iteration point for schedule-shape consumers
+    that must not trust the schedules' own accounting helpers (the
+    verifier recomputes byte totals from these records and *checks* the
+    helpers against them).
+    """
+    ppn = schedule.ppn
+    if isinstance(schedule, NapSchedule):
+        for i, step in enumerate(schedule.steps):
+            for rnd_idx, rnd in enumerate(step.rounds):
+                for src, dst in rnd:
+                    yield ScheduleMessage(
+                        step=i, round=rnd_idx, src=src, dst=dst,
+                        frac=1.0, chunk=0, combine=True,
+                        inter=src // ppn != dst // ppn,
+                    )
+        return
+    for i, step in enumerate(schedule.steps):
+        for (src, dst), frac in zip(step.pairs, step.pair_fracs()):
+            yield ScheduleMessage(
+                step=i, round=0, src=src, dst=dst, frac=float(frac),
+                chunk=step.chunk, combine=step.combine,
+                inter=src // ppn != dst // ppn,
+            )
 
 
 @functools.lru_cache(maxsize=None)

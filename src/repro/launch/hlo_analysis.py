@@ -28,12 +28,16 @@ from __future__ import annotations
 import dataclasses
 import re
 
-__all__ = ["HloStats", "analyze_hlo"]
+__all__ = [
+    "HloStats", "analyze_hlo", "CollectiveOp", "iter_collectives",
+    "parse_hlo",
+]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+    "c64": 8, "c128": 16,
 }
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _COMP_HEADER_RE = re.compile(
@@ -45,6 +49,7 @@ _INSTR_RE = re.compile(
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[0-9, ]+\}(?:, ?\{[0-9, ]+\})*)\}")
 _CALLED_RE = re.compile(r"(?:calls|body|to_apply|branch_computations)=.?%?([\w.\-{}, %]+)")
 
 _SKIP_MEM_OPS = {
@@ -172,6 +177,87 @@ def _parse(text: str) -> tuple[dict[str, _Comp], str | None]:
             cur.instrs[inst.name] = inst
             cur.order.append(inst.name)
     return comps, entry
+
+
+def parse_hlo(text: str) -> tuple[dict[str, _Comp], str | None]:
+    """Public handle on the structural parser: ``(computations, entry)``.
+
+    Each computation maps instruction name -> instruction (``name`` /
+    ``shape`` / ``op`` / ``rest``) plus emission ``order``.  Used by
+    :mod:`repro.analysis.hlo_lint` to build rules on the same parse the
+    traffic analysis trusts.
+    """
+    return _parse(text)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction of a compiled module, as lint input."""
+
+    kind: str  # canonical collective name ("-start" variants folded in)
+    op: str  # raw opcode as written in the HLO
+    name: str  # instruction name
+    computation: str  # owning computation (while bodies included)
+    shape: str  # raw result shape string
+    dtypes: tuple[str, ...]  # every dtype appearing in the result shape
+    elems: int  # total element count across the result shape
+    bytes: float  # result bytes (packed s4/u4 at 0.5 bytes/elem)
+    group_size: int
+    replica_groups: tuple[tuple[int, ...], ...]  # () when iota-format
+    rest: str  # raw argument/attribute tail
+
+
+def iter_collectives(text: str):
+    """Yield every collective op of every computation of an HLO module.
+
+    Unlike :func:`analyze_hlo` this walks *all* computations rather than
+    the entry call graph — a lint rule must see collectives inside while
+    bodies and fusions regardless of trip-count metadata.
+    """
+    comps, _ = _parse(text)
+    for comp in comps.values():
+        for iname in comp.order:
+            inst = comp.instrs[iname]
+            kind = next(
+                (
+                    k
+                    for k in _COLLECTIVES
+                    if inst.op == k or inst.op == k + "-start"
+                ),
+                None,
+            )
+            if kind is None:
+                continue
+            shapes = _SHAPE_RE.findall(inst.shape)
+            elems = 0
+            for _, dims in shapes:
+                cnt = 1
+                for d in dims.split(","):
+                    if d:
+                        cnt *= int(d)
+                elems += cnt
+            gm = _GROUPS_LIST_RE.search(inst.rest)
+            groups = (
+                tuple(
+                    tuple(int(x) for x in g.split(","))
+                    for g in re.findall(r"\{([0-9, ]+)\}", gm.group(1))
+                )
+                if gm
+                else ()
+            )
+            yield CollectiveOp(
+                kind=kind,
+                op=inst.op,
+                name=inst.name,
+                computation=comp.name,
+                shape=inst.shape,
+                dtypes=tuple(d for d, _ in shapes),
+                elems=elems,
+                bytes=float(_shape_bytes(inst.shape)),
+                group_size=_group_size(inst.rest),
+                replica_groups=groups,
+                rest=inst.rest,
+            )
 
 
 def _group_size(rest: str) -> int:

@@ -1,0 +1,210 @@
+"""HLO lint rules: synthetic-module unit tests + dtype table coverage.
+
+Each rule is demonstrated to fire on a hand-built violating module and
+to stay quiet on the clean counterpart, so the lint carried by
+``tests/test_transport_kernels.py`` and the ``python -m repro.analysis``
+driver is never vacuous.
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo_lint
+from repro.launch import hlo_analysis
+
+
+def _module(wire_line: str) -> str:
+    """A minimal parseable module: compressed inter-node wire line +
+    the legitimate intra-node f32 allgather (fast domain, ppn=4)."""
+    return f"""
+ENTRY %main (p0: f32[288]) -> f32[288] {{
+  %p0 = f32[288]{{0}} parameter(0)
+  {wire_line}
+  %intra = f32[288]{{0}} all-gather(%p0), replica_groups={{{{0,1,2,3}},{{4,5,6,7}}}}, dimensions={{0}}
+  ROOT %out = f32[288]{{0}} copy(%intra)
+}}
+"""
+
+
+CLEAN_S8 = _module(
+    "%wire = s8[288]{0} all-reduce(%p0), "
+    "replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add"
+)
+
+
+# ---------------------------------------------------------------------------
+# parser promotion: iter_collectives / dtype table
+# ---------------------------------------------------------------------------
+
+
+def test_iter_collectives_parses_kind_dtype_groups():
+    cols = hlo_lint.collective_ops(CLEAN_S8)
+    assert [(c.kind, c.dtypes, c.elems) for c in cols] == [
+        ("all-reduce", ("s8",), 288),
+        ("all-gather", ("f32",), 288),
+    ]
+    assert cols[0].replica_groups == ((0, 4), (1, 5), (2, 6), (3, 7))
+    assert cols[1].replica_groups == ((0, 1, 2, 3), (4, 5, 6, 7))
+
+
+def test_iter_collectives_folds_async_start_variants():
+    txt = _module(
+        "%wire = s8[288]{0} all-reduce-start(%p0), "
+        "replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add"
+    )
+    cols = hlo_lint.collective_ops(txt)
+    assert cols[0].kind == "all-reduce"
+    assert cols[0].op == "all-reduce-start"
+
+
+def test_dtype_table_prices_packed_int4():
+    """PR 6's packed-int4 transport: s4/u4 are half a byte, so traffic
+    analysis prices them instead of silently dropping the bytes."""
+    assert hlo_analysis._DTYPE_BYTES["s4"] == 0.5
+    assert hlo_analysis._DTYPE_BYTES["u4"] == 0.5
+    assert hlo_analysis._shape_bytes("s4[16]") == 8
+    assert hlo_analysis._shape_bytes("u4[10]{0}") == 5
+    assert hlo_analysis._shape_bytes("(u4[8], s8[4])") == 8
+
+
+def test_parse_hlo_public_handle():
+    comps, entry = hlo_analysis.parse_hlo(CLEAN_S8)
+    assert entry == "main"
+    assert "wire" in comps["main"].instrs
+
+
+# ---------------------------------------------------------------------------
+# wire-dtype rule
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_wire_clean_module_passes():
+    assert (
+        hlo_lint.lint_compressed_wire(
+            CLEAN_S8, bits=8, payload_elems=288, ppn=4
+        )
+        == []
+    )
+
+
+def test_compressed_wire_missing_dtype_fires():
+    # a 4-bit config must ship packed u8 — an s8 wire is the wrong width
+    vs = hlo_lint.lint_compressed_wire(
+        CLEAN_S8, bits=4, payload_elems=288, ppn=4
+    )
+    assert any("u8" in v.message for v in vs)
+    assert all(v.rule == "wire-dtype" for v in vs)
+
+
+def test_compressed_wire_wide_int_fires():
+    txt = _module(
+        "%wire = s32[288]{0} all-reduce(%p0), "
+        "replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add"
+    )
+    vs = hlo_lint.lint_compressed_wire(txt, bits=8, payload_elems=288, ppn=4)
+    assert any("wide-integer" in v.message for v in vs)
+    # the payload-sized s32 text screen fires too
+    assert any("s32[288]" in v.message for v in vs)
+
+
+def test_compressed_wire_s16_text_screen_fires():
+    txt = CLEAN_S8.replace("ROOT %out = f32[288]{0} copy(%intra)",
+                           "ROOT %out = s16[288]{0} copy(%intra)")
+    vs = hlo_lint.lint_compressed_wire(txt, bits=8, payload_elems=288, ppn=4)
+    assert any("s16[" in v.message for v in vs)
+
+
+def test_compressed_wire_intra_node_f32_exempt_only_with_ppn():
+    """The payload-sized f32 intra-node allgather is legitimate (the
+    fast domain is uncompressed by design) — but only replica groups
+    that provably stay inside one node earn the exemption."""
+    clean = hlo_lint.lint_compressed_wire(
+        CLEAN_S8, bits=8, payload_elems=288, ppn=4
+    )
+    assert clean == []
+    # without ppn the same module is conservatively flagged
+    strict = hlo_lint.lint_compressed_wire(
+        CLEAN_S8, bits=8, payload_elems=288
+    )
+    assert any("payload-sized f32" in v.message for v in strict)
+
+
+def test_compressed_wire_inter_node_f32_payload_fires():
+    txt = _module(
+        "%wire = f32[288]{0} all-reduce(%p0), "
+        "replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add"
+    )
+    vs = hlo_lint.lint_compressed_wire(txt, bits=8, payload_elems=288, ppn=4)
+    kinds = {v.rule for v in vs}
+    assert kinds == {"wire-dtype"}
+    assert any("uncompressed wire" in v.message for v in vs)
+    # sub-payload floats (scale exchange etc.) stay allowed
+    assert not any("f32[3]" in v.message for v in vs)
+
+
+def test_expected_wire_dtype_bounds():
+    assert hlo_lint.expected_wire_dtype(8) == "s8"
+    assert hlo_lint.expected_wire_dtype(5) == "s8"
+    assert hlo_lint.expected_wire_dtype(4) == "u8"
+    assert hlo_lint.expected_wire_dtype(2) == "u8"
+    with pytest.raises(ValueError):
+        hlo_lint.expected_wire_dtype(9)
+
+
+# ---------------------------------------------------------------------------
+# collective-count budgets
+# ---------------------------------------------------------------------------
+
+
+def test_collective_counts_on_parsed_hlo():
+    assert (
+        hlo_lint.lint_collective_counts(
+            CLEAN_S8, {"all-reduce": 1, "all-gather": (0, 1)}
+        )
+        == []
+    )
+    vs = hlo_lint.lint_collective_counts(CLEAN_S8, {"all-reduce": 2})
+    assert vs and vs[0].rule == "collective-count"
+    assert "1 x 'all-reduce'" in vs[0].message
+
+
+def test_collective_counts_substring_mode_for_jaxpr():
+    jaxpr = "a = pallas_call[x] b\nc = pallas_call[y] d\n"
+    assert hlo_lint.lint_collective_counts(jaxpr, {"pallas_call": 2}) == []
+    vs = hlo_lint.lint_collective_counts(jaxpr, {"pallas_call": 4})
+    assert vs and "budget 4" in vs[0].message
+
+
+def test_assert_clean_raises_with_listing():
+    vs = hlo_lint.lint_collective_counts("", {"pallas_call": 1})
+    with pytest.raises(AssertionError, match="pallas_call"):
+        hlo_lint.assert_clean(vs, "ctx")
+    hlo_lint.assert_clean([], "ctx")  # no-op when clean
+
+
+# ---------------------------------------------------------------------------
+# stable-lowering rule
+# ---------------------------------------------------------------------------
+
+
+def test_stable_lowering_clean_on_pure_fn():
+    assert hlo_lint.lint_stable_lowering(
+        lambda x: x * 2.0 + 1.0, jnp.zeros((4,), jnp.float32)
+    ) == []
+
+
+def test_stable_lowering_fires_on_varying_capture():
+    """A traced fn baking in a fresh constant per call lowers
+    differently every time — under jit that's a silent recompile per
+    train step, which is exactly what the rule exists to catch."""
+    state = {"n": 0}
+
+    def unstable(x):
+        state["n"] += 1
+        return x + float(state["n"])
+
+    vs = hlo_lint.lint_stable_lowering(
+        unstable, jnp.zeros((4,), jnp.float32)
+    )
+    assert vs and vs[0].rule == "stable-lowering"
+    assert "recompile" in vs[0].message

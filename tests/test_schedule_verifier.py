@@ -1,0 +1,344 @@
+"""Schedule-verifier coverage: real engines pass, mutants fail.
+
+Three layers:
+
+* **sweep** — every registered engine with a schedule builder passes all
+  four verifier passes over the tier-1 grid matrix, including the
+  degenerate (``n=1``, ``ppn=1``) and prime (3, 5, 7, 13 nodes) grids
+  with ragged payloads;
+* **mutation** — each verifier rule fires on a deliberately broken
+  schedule (dropped recv, cyclic dep, duplicated contribution, inflated
+  bytes): no vacuous passes;
+* **integration** — ``comm.verify_engine`` and the verify-on-register
+  gate reject a broken builder and roll the registry back.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.analysis import schedule_verifier as sv
+from repro.core import comm, napalg, simulator
+
+
+def _builder_engines():
+    return sorted(
+        key
+        for key, spec in comm.registered_engines().items()
+        if spec.build_schedule is not None
+    )
+
+
+def _spec(key):
+    collective, name = key.split(":", 1)
+    return comm.get_engine(name, collective)
+
+
+# ---------------------------------------------------------------------------
+# sweep: every engine x tier-1 grid matrix (degenerate + prime + ragged)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("key", _builder_engines())
+@pytest.mark.parametrize(
+    "n,ppn",
+    [(1, 1), (1, 4), (2, 1), (3, 1), (2, 2), (3, 2), (5, 4), (7, 3),
+     (13, 2)],
+)
+@pytest.mark.parametrize("elems", [None, 1, 7, 193])
+def test_engine_passes_verifier(key, n, ppn, elems):
+    spec = _spec(key)
+    chunks = 3 if spec.chunked else 1
+    report = sv.verify_spec(spec, n, ppn, elems=elems, chunks=chunks)
+    assert report.ok, report.violations
+
+
+def test_full_grid_matrix_zero_violations():
+    """The BENCH_7 sweep itself: every engine x GRID_MATRIX x payloads."""
+    for key in _builder_engines():
+        reports = sv.verify_spec_grid(_spec(key))
+        bad = [r for r in reports if not r.ok]
+        assert not bad, (key, bad[0].to_row() if bad else None)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=9),
+    ppn=st.integers(min_value=1, max_value=5),
+    elems=st.one_of(st.none(), st.integers(min_value=1, max_value=400)),
+    key=st.sampled_from(
+        ["allreduce:nap", "allreduce:rd", "allreduce:smp", "allreduce:mla",
+         "allreduce:mla_pipelined", "reduce_scatter:mla_rs",
+         "allgather:mla_ag"]
+    ),
+    chunks=st.integers(min_value=1, max_value=4),
+)
+def test_fuzz_all_invariants(n, ppn, elems, key, chunks):
+    """Any grid the dispatcher could route to an engine verifies clean.
+
+    Grids below an engine's declared minimum are clamped up to it (the
+    compat shim has no ``assume``), so every draw exercises the four
+    passes rather than skipping.
+    """
+    spec = _spec(key)
+    n = max(n, spec.min_nodes)
+    ppn = max(ppn, spec.min_ppn)
+    report = sv.verify_spec(spec, n, ppn, elems=elems, chunks=chunks)
+    assert report.checked == sv.RULES
+    assert report.ok, report.violations
+
+
+# ---------------------------------------------------------------------------
+# mutation: each rule demonstrably fires
+# ---------------------------------------------------------------------------
+
+
+def _rules(report):
+    return {v.rule for v in report.violations}
+
+
+def test_dropped_recv_fires_match_rule():
+    """Removing one message while keeping recv_chips leaves an orphan
+    recv (fold mask would admit garbage) and a dropped contribution."""
+    s = napalg.build_nap_schedule(3, 2)
+    st0 = s.steps[0]
+    rounds = tuple(
+        tuple(rnd[:-1]) if i == 0 else rnd
+        for i, rnd in enumerate(st0.rounds)
+    )
+    mut = dataclasses.replace(
+        s, steps=(dataclasses.replace(st0, rounds=rounds),) + s.steps[1:]
+    )
+    report = sv.verify_schedule(mut, engine="nap")
+    assert "match" in _rules(report)
+    assert "reduction" in _rules(report)
+    assert any("orphan recv" in v.message for v in report.violations)
+
+
+def test_cyclic_dep_fires_deadlock_rule_with_trace():
+    s = napalg.build_mla_pipelined_schedule(2, 2, 2, 16)
+    steps = list(s.steps)
+    steps[1] = dataclasses.replace(steps[1], dep=2)
+    steps[2] = dataclasses.replace(steps[2], dep=1)
+    mut = dataclasses.replace(s, steps=tuple(steps))
+    report = sv.verify_schedule(
+        mut, engine="mla_pipelined", elems=16, chunks=2
+    )
+    assert "deadlock" in _rules(report)
+    # the counterexample trace names the cycle steps
+    assert any(
+        "cycle" in v.message and "step 1" in v.message and "step 2"
+        in v.message
+        for v in report.violations
+        if v.rule == "deadlock"
+    )
+
+
+def test_forward_dep_fires_deadlock_rule():
+    s = napalg.build_mla_pipelined_schedule(2, 2, 2, 16)
+    steps = list(s.steps)
+    steps[0] = dataclasses.replace(steps[0], dep=len(steps) - 1)
+    mut = dataclasses.replace(s, steps=tuple(steps))
+    report = sv.verify_schedule(
+        mut, engine="mla_pipelined", elems=16, chunks=2
+    )
+    assert any(
+        v.rule == "deadlock" and "forward dep" in v.message
+        for v in report.violations
+    )
+
+
+def test_duplicated_contribution_fires_reduction_rule():
+    """A duplicated self-chip double-counts that chip's partial — the
+    exact bug class (duplicate contributions) the paper eliminates."""
+    s = napalg.build_nap_schedule(3, 2)
+    st0 = s.steps[0]
+    mut = dataclasses.replace(
+        s,
+        steps=(
+            dataclasses.replace(
+                st0, self_chips=st0.self_chips + st0.recv_chips[:1]
+            ),
+        )
+        + s.steps[1:],
+    )
+    report = sv.verify_schedule(mut, engine="nap")
+    assert "reduction" in _rules(report)
+    assert any("duplicated" in v.message for v in report.violations)
+
+
+def test_duplicated_message_fires_match_and_reduction():
+    s = napalg.build_rd_schedule(2, 2)
+    st0 = s.steps[0]
+    mut = dataclasses.replace(
+        s,
+        steps=(dataclasses.replace(st0, pairs=st0.pairs + st0.pairs[:1]),)
+        + s.steps[1:],
+    )
+    report = sv.verify_schedule(mut, engine="rd")
+    assert {"match", "reduction"} <= _rules(report)
+
+
+def test_inflated_bytes_fires_bytes_rule():
+    """Scaling every fraction x1.5 keeps the schedule well-matched (all
+    fracs stay in (0, 1]) but breaks byte accounting against both the
+    stripe geometry and the declared uneven-block bound."""
+    s = napalg.build_mla_schedule(3, 2, 17)
+    steps = tuple(
+        dataclasses.replace(
+            step,
+            frac=step.frac * 1.5 if step.fracs is None else step.frac,
+            fracs=None if step.fracs is None
+            else tuple(f * 1.5 for f in step.fracs),
+        )
+        for step in s.steps
+    )
+    mut = dataclasses.replace(s, steps=tuple(steps))
+    report = sv.verify_schedule(mut, engine="mla", elems=17)
+    assert _rules(report) == {"bytes"}
+
+
+def test_unknown_fractional_kind_is_unverifiable_not_vacuous():
+    """A fractional schedule of unknown kind must *fail* verification
+    (the verifier cannot prove it) instead of passing vacuously."""
+    s = napalg.build_mla_schedule(2, 2, 16)
+    mut = dataclasses.replace(s, kind="generic")
+    report = sv.verify_schedule(mut, engine="mystery", elems=16)
+    assert any(
+        v.rule == "reduction" and "extend the verifier" in v.message
+        for v in report.violations
+    )
+
+
+def test_builder_crash_is_a_verification_failure():
+    def crashing_builder(n, ppn):
+        raise RuntimeError("boom")
+
+    spec = comm.EngineSpec(
+        name="crash", collective="allreduce", execute=lambda x, **k: x,
+        build_schedule=crashing_builder,
+    )
+    report = sv.verify_spec(spec, 2, 2)
+    assert not report.ok
+    assert any("crashed" in v.message for v in report.violations)
+
+
+# ---------------------------------------------------------------------------
+# accounting helpers: iter_messages + replay cross-checks
+# ---------------------------------------------------------------------------
+
+
+def test_iter_messages_covers_both_schedule_types():
+    nap = napalg.build_nap_schedule(3, 2)
+    msgs = list(napalg.iter_messages(nap))
+    assert len(msgs) == sum(
+        len(rnd) for step in nap.steps for rnd in step.rounds
+    )
+    assert all(m.frac == 1.0 and m.combine for m in msgs)
+    assert all(
+        m.inter == (m.src // 2 != m.dst // 2) for m in msgs
+    )
+
+    mla = napalg.build_mla_schedule(3, 2, 17)
+    msgs = list(napalg.iter_messages(mla))
+    assert len(msgs) == sum(len(step.pairs) for step in mla.steps)
+    assert all(0.0 < m.frac <= 1.0 for m in msgs)
+
+
+@pytest.mark.parametrize(
+    "sched",
+    [
+        napalg.build_nap_schedule(5, 3),
+        napalg.build_rd_schedule(3, 2),
+        napalg.build_mla_schedule(5, 3, 47),
+        napalg.build_mla_pipelined_schedule(3, 2, 3, 29),
+    ],
+    ids=["nap", "rd", "mla", "mla_pipelined"],
+)
+def test_replay_bytes_matches_helper_and_endpoint_sum(sched):
+    s = 4096.0
+    replayed = simulator.replay_internode_bytes(sched, s)
+    endpoint = sv.endpoint_internode_bytes(sched, s)
+    np.testing.assert_allclose(replayed, endpoint, rtol=1e-9)
+    assert replayed.max(initial=0.0) == pytest.approx(
+        sched.max_internode_bytes_per_chip(s)
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry integration: verify_engine + verify-on-register
+# ---------------------------------------------------------------------------
+
+
+def test_verify_engine_passes_for_registered_engines():
+    for key in _builder_engines():
+        collective, name = key.split(":", 1)
+        reports = comm.verify_engine(name)
+        assert reports and all(r.ok for r in reports)
+
+
+def test_verify_engine_single_grid_and_topology():
+    reports = comm.verify_engine("mla", n_nodes=5, ppn=4, elems=193)
+    assert [r.ok for r in reports] == [True]
+    topo = comm.Topology.of(3, 2)
+    reports = comm.verify_engine("nap", topo)
+    assert [(r.n_nodes, r.ppn, r.ok) for r in reports] == [(3, 2, True)]
+
+
+def _dup_message_builder(n, ppn):
+    s = napalg.build_rd_schedule(n, ppn)
+    st0 = s.steps[0]
+    return dataclasses.replace(
+        s,
+        steps=(dataclasses.replace(st0, pairs=st0.pairs + st0.pairs[:1]),)
+        + s.steps[1:],
+    )
+
+
+def test_register_engine_rejects_unverifiable_schedule(monkeypatch):
+    """conftest sets REPRO_VERIFY_ON_REGISTER: a broken builder must be
+    rejected at registration and rolled back out of the registry."""
+    monkeypatch.setenv("REPRO_VERIFY_ON_REGISTER", "1")
+    with pytest.raises(ValueError, match="failed static verification"):
+        comm.register_engine(
+            "broken_rd",
+            execute=lambda x, **k: x,
+            build_schedule=_dup_message_builder,
+        )
+    assert "broken_rd" not in comm.registered_engines("allreduce")
+
+
+def test_register_engine_verify_opt_out(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY_ON_REGISTER", "1")
+    try:
+        comm.register_engine(
+            "broken_rd_optout",
+            execute=lambda x, **k: x,
+            build_schedule=_dup_message_builder,
+            verify=False,
+        )
+        assert "broken_rd_optout" in comm.registered_engines("allreduce")
+    finally:
+        comm._REGISTRY["allreduce"].pop("broken_rd_optout", None)
+
+
+def test_register_engine_no_verify_when_env_unset(monkeypatch):
+    monkeypatch.delenv("REPRO_VERIFY_ON_REGISTER", raising=False)
+    try:
+        comm.register_engine(
+            "broken_rd_noenv",
+            execute=lambda x, **k: x,
+            build_schedule=_dup_message_builder,
+        )
+        assert "broken_rd_noenv" in comm.registered_engines("allreduce")
+    finally:
+        comm._REGISTRY["allreduce"].pop("broken_rd_noenv", None)
+
+
+def test_verify_engine_reports_are_json_safe():
+    import json
+
+    reports = comm.verify_engine("mla_pipelined")
+    json.dumps([r.to_row() for r in reports])
