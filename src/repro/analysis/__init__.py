@@ -1,38 +1,69 @@
 """Static analysis for the collective engine tournament.
 
-Two passes prove a registered engine correct *before* it races:
+Three layers prove an executed lowering correct *before* it races — a
+proof chain from the abstract schedule down to the compiled module:
 
 1. **Schedule verifier** (:mod:`repro.analysis.schedule_verifier`) —
    given any built ``NapSchedule``/``P2PSchedule``, statically proves
    match-completeness, deadlock-freedom, exactly-once reduction
    correctness and byte-accounting equality against the engine's
-   declared inter-node bound.
-2. **HLO wire-lint** (:mod:`repro.analysis.hlo_lint`) — rule-based
+   declared inter-node bound.  This proves the *plan* is right.
+2. **SPMD jaxpr lint** (:mod:`repro.analysis.spmd_lint`) — a dataflow
+   analyzer over the traced program (the closed jaxpr, recursing
+   through ``pjit``/``shard_map``/``scan``/``while``/``cond``) proving
+   the *executed lowering matches the verified plan*: every collective
+   is reached uniformly (no collective under a rank-varying predicate
+   — the static form of a hang), axis discipline holds (axes resolve,
+   no shadowing, branch-symmetric collective sequences), numerics flow
+   is sound (sub-f32 payloads accumulate in f32 across the slow
+   domain, quantization is scale-dominated, packed words fit the
+   wire), byte accounting re-derived from the jaxpr equals the
+   schedule-declared bound, and donated transport buffers are dead
+   after the call.
+3. **HLO wire-lint** (:mod:`repro.analysis.hlo_lint`) — rule-based
    linter over compiled-step HLO: wire-dtype rules for compressed
    transport (no ``f32``/wide-int payloads on a compressed wire),
-   collective-count budgets, and a no-silent-recompile rule.
+   replica-group partition checks (no overlap, no gap), collective-
+   count budgets, and a no-silent-recompile rule.  This proves what
+   XLA actually emitted.
+
+Layers 1 and 2 both run at engine registration (see
+:func:`repro.core.comm.register_engine`): the schedule verifier for
+``verify=True`` engines, the jaxpr lint for **every** engine — natives
+included, since the lint needs only a trace, not a schedule.
 
 Quickstart::
 
     from repro.core import comm
-    from repro.analysis import verify_schedule
+    from repro.analysis import verify_schedule, spmd_lint
 
-    # verify one schedule directly
+    # layer 1: verify one schedule directly
     sched = comm.engine_schedule("mla", n_nodes=5, ppn=4, elems=193)
     report = verify_schedule(sched, engine="mla", elems=193)
     assert report.ok, report.violations
 
-    # or verify a registered engine over its grid (what
+    # layer 2a: lint a registered engine's traced lowering (what
     # register_engine does automatically under REPRO_VERIFY_ON_REGISTER)
-    comm.verify_engine("mla", n_nodes=5, ppn=4, elems=193)
+    comm.lint_lowering("nap", n_nodes=3, ppn=2)
 
-    # or sweep everything and emit the BENCH_7 verification table:
+    # layer 2b: lint any traced function under an axis env
+    rep = spmd_lint.lint_traced(
+        my_step, example_arg,
+        axis_env=[("pod", 2), ("data", 4)],
+        inter_axes=("pod",), intra_axes=("data",),
+    )
+    spmd_lint.assert_spmd_clean(rep)
+
+    # or sweep everything and emit the benchmark tables:
     #   PYTHONPATH=src python -m repro.analysis --json reports/BENCH_7.json
+    #   PYTHONPATH=src python -m repro.analysis --spmd \\
+    #       --json reports/BENCH_8.json
 
 This package imports neither ``jax`` nor ``repro.core.comm`` at module
 scope: the registry calls *into* the verifier on registration, and the
 ``__main__`` driver must be able to set ``XLA_FLAGS`` before anything
-pulls in jax.
+pulls in jax.  (:mod:`repro.analysis.spmd_lint` is likewise
+jax-import-free at module scope — it walks jaxprs structurally.)
 """
 
 from .schedule_verifier import (  # noqa: F401
@@ -52,7 +83,16 @@ from .hlo_lint import (  # noqa: F401
     collective_ops,
     lint_collective_counts,
     lint_compressed_wire,
+    lint_replica_groups,
     lint_stable_lowering,
+)
+from .spmd_lint import (  # noqa: F401
+    SPMD_RULES,
+    SpmdLintReport,
+    SpmdViolation,
+    assert_spmd_clean,
+    lint_jaxpr,
+    lint_traced,
 )
 
 __all__ = [
@@ -70,5 +110,12 @@ __all__ = [
     "collective_ops",
     "lint_collective_counts",
     "lint_compressed_wire",
+    "lint_replica_groups",
     "lint_stable_lowering",
+    "SPMD_RULES",
+    "SpmdLintReport",
+    "SpmdViolation",
+    "assert_spmd_clean",
+    "lint_jaxpr",
+    "lint_traced",
 ]

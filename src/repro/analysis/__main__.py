@@ -14,9 +14,18 @@ verification table:
    collective-count and stable-lowering rules over the jaxpr and the
    optimized HLO.
 
+3. **SPMD jaxpr lint** (``--spmd``, the ``BENCH_8.json`` gate) — the
+   middle layer of the proof chain: every registered engine's *executed*
+   lowering is traced to a jaxpr and checked for collective uniformity,
+   axis discipline, numerics flow and schedule-vs-jaxpr byte equality
+   (:func:`repro.core.comm.lint_lowering`), then the same rules run
+   over the compressed grad-sync step, the data-parallel train step and
+   the serve decode loop.
+
 Exits non-zero on any violation, so CI can gate on it::
 
     PYTHONPATH=src python -m repro.analysis --json reports/BENCH_7.json
+    PYTHONPATH=src python -m repro.analysis --spmd --json reports/BENCH_8.json
 
 ``--skip-hlo`` runs only the (fast, jax-free) schedule sweep;
 ``--skip-schedules`` only the lint.
@@ -140,6 +149,12 @@ def run_hlo_lint() -> dict:
                 hlo, bits=bits, payload_elems=payload_elems, ppn=4
             ),
         )
+        record(
+            f"hlo[bits={bits}] replica-group partition",
+            hlo_lint.lint_replica_groups(
+                hlo, num_devices=len(mesh.devices.flat)
+            ),
+        )
     g, args = compiled(8)
     record(
         "stable lowering (no silent recompile)",
@@ -148,29 +163,198 @@ def run_hlo_lint() -> dict:
     return {"rows": rows, "violations": len(rows)}
 
 
+#: engine-cell matrix of the --spmd sweep: grids past the engines'
+#: minimums plus one asymmetric shape, at full and half wire precision
+_SPMD_GRIDS = ((2, 2), (3, 2), (2, 4))
+_SPMD_DTYPES = ("float32", "bfloat16")
+
+
+def run_spmd_sweep() -> dict:
+    """Trace-and-lint sweep over every engine lowering + the compiled
+    workloads (grad sync, train step, serve decode)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import comm, grad_sync
+
+    from . import spmd_lint
+
+    rows = []
+    n_violations = 0
+
+    def record(rep) -> None:
+        nonlocal n_violations
+        rows.append(rep.to_row())
+        n_violations += len(rep.violations)
+        status = "FAIL" if rep.violations else "ok"
+        byte_col = (
+            "bytes=?"
+            if rep.internode_bytes_per_chip is None
+            else f"bytes={rep.internode_bytes_per_chip:g}"
+            + ("" if rep.declared_bytes is None else "=declared")
+        )
+        print(
+            f"  {rep.label:40s} {rep.collectives:3d} collectives "
+            f"{byte_col:18s} {len(rep.violations):2d} violations  {status}"
+        )
+
+    # -- 1. every registered engine's executed lowering ------------------
+    per_engine: dict[str, dict] = {}
+    byte_verified = 0
+    for key in sorted(comm.registered_engines()):
+        collective, name = key.split(":", 1)
+        spec = comm.get_engine(name, collective)
+        cells = skipped = bounded = bad = 0
+        for n, p in _SPMD_GRIDS:
+            if n < spec.min_nodes or p < spec.min_ppn:
+                skipped += len(_SPMD_DTYPES)
+                continue
+            for dt in _SPMD_DTYPES:
+                rep = comm.lint_lowering(
+                    name, n_nodes=n, ppn=p, dtype=dt,
+                    raise_on_violation=False,
+                )
+                record(rep)
+                cells += 1
+                if rep.declared_bytes is not None:
+                    bounded += 1
+                    byte_verified += 1
+                if not rep.ok:
+                    bad += 1
+        per_engine[key] = {
+            "cells": cells,
+            "byte_verified": bounded,
+            "skipped_below_min_grid": skipped,
+            "violations": bad,
+        }
+
+    # -- 2. the compressed grad-sync step (shard-level trace) ------------
+    topo = comm.Topology(2, 4, inter_axes=("pod",), intra_axes=("data",))
+    axis_env = [("pod", 2), ("data", 4)]
+    axis_sizes = dict(axis_env)
+    shapes = [(64 + 32 * i,) for i in range(3)]
+    leaves = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    for bits in (8, 4):
+        policy = comm.CommPolicy(
+            algorithm="nap", mean=True, compress_bits=bits
+        )
+        ctx = comm.CommContext(topo, policy)
+        plan = grad_sync.plan_for_tree(leaves, cfg=policy, topology=topo)
+
+        def f(*ls):
+            return jnp.concatenate(
+                grad_sync.sync_with_context(list(ls), ctx, plan=plan)
+            )
+
+        closed = jax.make_jaxpr(f, axis_env=axis_env)(*leaves)
+        record(
+            spmd_lint.lint_jaxpr(
+                closed, axis_sizes=axis_sizes,
+                inter_axes=("pod",), intra_axes=("data",),
+                label=f"grad_sync[bits={bits}]",
+            )
+        )
+
+    # -- 3. the data-parallel train step (launch/steps) ------------------
+    import dataclasses as _dc
+
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import OptimizerConfig
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import make_dp_train_step
+    from repro.models import build_model
+    from repro.optim import adamw_init
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    cfg = _dc.replace(reduced(ARCHS["minicpm-2b"]), dtype="float32")
+    opt_cfg = OptimizerConfig(lr=1e-2, schedule="constant", warmup_steps=1)
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    state_sds = {
+        "params": params_sds,
+        "opt": jax.eval_shape(adamw_init, params_sds),
+    }
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((16, 32), jnp.int32)}
+    step = make_dp_train_step(
+        cfg, opt_cfg, mesh, grad_sync.GradSyncConfig(
+            algorithm="nap", mean=True,
+        ),
+    )
+    closed = jax.make_jaxpr(step)(state_sds, batch_sds)
+    record(
+        spmd_lint.lint_jaxpr(
+            closed, axis_sizes=axis_sizes,
+            inter_axes=("pod",), intra_axes=("data",),
+            label="train_step[nap]",
+            # mesh-level program: the step's own shard_map binds the
+            # axes; inputs are host values, uniform until sharded
+            axes_bound_at_root=False,
+        )
+    )
+
+    # -- 4. the serve decode loop (launch/serve) -------------------------
+    from repro.launch import serve as serve_mod
+
+    serve_model = build_model(cfg)
+    shard_fn = serve_mod.make_serve_shard(
+        serve_model, comm.CommContext(topo), gen_len=4, max_len=10,
+        eos_id=1,
+    )
+    prompts_sds = jax.ShapeDtypeStruct((1, 6), jnp.int32)
+    closed = jax.make_jaxpr(shard_fn, axis_env=axis_env)(
+        params_sds, prompts_sds
+    )
+    record(
+        spmd_lint.lint_jaxpr(
+            closed, axis_sizes=axis_sizes,
+            inter_axes=("pod",), intra_axes=("data",),
+            label="serve_decode[eos early-exit]",
+        )
+    )
+
+    return {
+        "grids": [list(g) for g in _SPMD_GRIDS],
+        "dtypes": list(_SPMD_DTYPES),
+        "engines": per_engine,
+        "byte_verified_cells": byte_verified,
+        "cells": len(rows),
+        "violations": n_violations,
+        "rows": rows,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis", description=__doc__
     )
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write the BENCH_7 verification table here")
+                    help="write the verification table here "
+                         "(BENCH_7, or BENCH_8 with --spmd)")
+    ap.add_argument("--spmd", action="store_true",
+                    help="run the SPMD jaxpr lint sweep (BENCH_8) "
+                         "instead of the BENCH_7 passes")
     ap.add_argument("--skip-hlo", action="store_true",
                     help="schedule sweep only (fast, jax-free)")
     ap.add_argument("--skip-schedules", action="store_true",
                     help="HLO lint only")
     args = ap.parse_args(argv)
 
-    report: dict = {"bench": "BENCH_7", "ok": True}
-    if not args.skip_schedules:
-        print("schedule verification sweep:")
-        report["schedule_verification"] = run_schedule_sweep()
-    if not args.skip_hlo:
-        print("HLO wire lint:")
-        report["hlo_lint"] = run_hlo_lint()
+    if args.spmd:
+        report = {"bench": "BENCH_8", "ok": True}
+        print("SPMD jaxpr lint sweep:")
+        report["spmd_lint"] = run_spmd_sweep()
+    else:
+        report = {"bench": "BENCH_7", "ok": True}
+        if not args.skip_schedules:
+            print("schedule verification sweep:")
+            report["schedule_verification"] = run_schedule_sweep()
+        if not args.skip_hlo:
+            print("HLO wire lint:")
+            report["hlo_lint"] = run_hlo_lint()
 
     n_violations = sum(
         report.get(k, {}).get("violations", 0)
-        for k in ("schedule_verification", "hlo_lint")
+        for k in ("schedule_verification", "hlo_lint", "spmd_lint")
     )
     report["ok"] = n_violations == 0
 

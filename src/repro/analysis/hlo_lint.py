@@ -14,6 +14,10 @@ ad-hoc regexes per test:
 * :func:`lint_stable_lowering` — lowering the same function twice must
   produce identical text; a divergence means tracing captures varying
   state and the train loop would silently recompile every step.
+* :func:`lint_replica_groups` — every collective's replica groups must
+  exactly partition the device set: no device in two groups (double
+  participation deadlocks or double-counts), no device missing (a rank
+  that never joins hangs the group), none out of range.
 
 Rules return a list of :class:`LintViolation` (empty = clean) so a
 driver can aggregate them into a report; the ``assert_clean`` helper
@@ -23,6 +27,7 @@ turns them into one readable failure for test use.
 from __future__ import annotations
 
 import dataclasses
+import re
 
 from ..launch.hlo_analysis import CollectiveOp, iter_collectives  # noqa: F401
 
@@ -32,6 +37,7 @@ __all__ = [
     "lint_compressed_wire",
     "lint_collective_counts",
     "lint_stable_lowering",
+    "lint_replica_groups",
     "assert_clean",
 ]
 
@@ -171,6 +177,80 @@ def lint_compressed_wire(
                 "(index math is fine, payload-sized s32 is not)",
             )
         )
+    return out
+
+
+#: iota-format replica groups, ``replica_groups=[num_groups,group_size]``
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def lint_replica_groups(
+    hlo_text: str, *, num_devices: int
+) -> list[LintViolation]:
+    """Every collective's replica groups must *partition* the devices.
+
+    For explicit groups (``replica_groups={{0,1},{2,3}}``) the rule
+    checks the three partition axioms directly: no device appears in
+    two groups (double participation — the op double-counts or
+    deadlocks), no device in ``range(num_devices)`` is missing (an
+    absent rank never joins and the group hangs waiting for it), and
+    no member lies outside the device range.  For the iota form
+    (``replica_groups=[num_groups,group_size]``) the partition is
+    structural by construction, so only the product is checked against
+    ``num_devices``.  Collectives with no ``replica_groups`` attribute
+    use the single implicit all-devices group, which always partitions.
+    """
+    out: list[LintViolation] = []
+    want = set(range(num_devices))
+    for c in iter_collectives(hlo_text):
+        where = f"collective {c.name} ({c.op}) in {c.computation}"
+        if c.replica_groups:
+            seen: dict[int, int] = {}
+            for g in c.replica_groups:
+                for d in g:
+                    seen[d] = seen.get(d, 0) + 1
+            dup = sorted(d for d, n in seen.items() if n > 1)
+            if dup:
+                out.append(
+                    LintViolation(
+                        "replica-groups",
+                        f"{where}: devices {dup} appear in more than "
+                        f"one replica group (overlap): "
+                        f"{c.replica_groups}",
+                    )
+                )
+            bogus = sorted(set(seen) - want)
+            if bogus:
+                out.append(
+                    LintViolation(
+                        "replica-groups",
+                        f"{where}: devices {bogus} are outside the "
+                        f"{num_devices}-device range: "
+                        f"{c.replica_groups}",
+                    )
+                )
+            missing = sorted(want - set(seen))
+            if missing:
+                out.append(
+                    LintViolation(
+                        "replica-groups",
+                        f"{where}: devices {missing} appear in no "
+                        f"replica group (gap): {c.replica_groups}",
+                    )
+                )
+        else:
+            m = _IOTA_GROUPS_RE.search(c.rest)
+            if m:
+                n_g, g_sz = int(m.group(1)), int(m.group(2))
+                if n_g * g_sz != num_devices:
+                    out.append(
+                        LintViolation(
+                            "replica-groups",
+                            f"{where}: iota replica_groups "
+                            f"[{n_g},{g_sz}] cover {n_g * g_sz} "
+                            f"devices, module has {num_devices}",
+                        )
+                    )
     return out
 
 

@@ -117,6 +117,35 @@ def _op_identity(op: str, dtype) -> jax.Array:
     return jnp.asarray(-jnp.inf if op == "max" else jnp.inf, dtype)
 
 
+def _needs_f32_accum(dtype) -> bool:
+    """Whether cross-node sums of this dtype must accumulate in f32."""
+    dt = jnp.dtype(dtype)
+    return jnp.issubdtype(dt, jnp.floating) and dt.itemsize < 4
+
+
+def _f32_fold(fold: Callable, op: str, dtype) -> Callable:
+    """Pairwise fold that accumulates sub-f32 float sums in float32.
+
+    The wire payload keeps its native dtype — upcast happens *after*
+    receive and the result is downcast *before* the next send — so
+    transport bytes are unchanged; only the local accumulate runs wide.
+    ``max``/``min`` lose nothing to low precision and keep the plain
+    fold.  This is the executed counterpart of the spmd-lint
+    numerics-flow rule: a bf16 payload must never feed a cross-node
+    reduction directly.
+    """
+    if op != "sum" or not _needs_f32_accum(dtype):
+        return fold
+    dtype = jnp.dtype(dtype)
+
+    def wide_fold(a: jax.Array, b: jax.Array) -> jax.Array:
+        return fold(
+            a.astype(jnp.float32), b.astype(jnp.float32)
+        ).astype(dtype)
+
+    return wide_fold
+
+
 def _chip_index(inter_axes: tuple[str, ...], intra_axes: tuple[str, ...]):
     """SMP-style flat chip id: node-major, local-rank-minor."""
     node = 0
@@ -164,6 +193,7 @@ def nap_allreduce(
     """
     inter, intra = _as_tuple(inter_axes), _as_tuple(intra_axes)
     fold, named_reduce, _ = _OPS[op]
+    fold = _f32_fold(fold, op, x.dtype)
     n = int(np.prod([compat.axis_size(ax) for ax in inter]))
     ppn = int(np.prod([compat.axis_size(ax) for ax in intra]))
     sched = napalg.build_nap_schedule(n, ppn)
@@ -207,6 +237,7 @@ def _run_p2p_schedule(
     op: str,
 ) -> jax.Array:
     fold, _, _ = _OPS[op]
+    fold = _f32_fold(fold, op, x.dtype)
     chip = _chip_index(inter, intra)
     v = x
     for step, rmask in zip(sched.steps, napalg.p2p_recv_masks(sched)):
@@ -278,6 +309,7 @@ def ring_allreduce(
     lower bound (paper §II, [25]).  Latency-poor for small ``s``.
     """
     fold, _, _ = _OPS[op]
+    fold = _f32_fold(fold, op, x.dtype)
     ax = _as_tuple(axes)
     p = int(np.prod([compat.axis_size(a) for a in ax]))
     if p == 1:
@@ -362,15 +394,23 @@ def rabenseifner_allreduce(
             [flat, jnp.full((pad,), _op_identity(op, flat.dtype))]
         )
     tiles = flat.reshape(p, -1)
-    if op == "sum":
+    if op == "sum" and not _needs_f32_accum(flat.dtype):
         shard = lax.psum_scatter(tiles, ax, scatter_dimension=0, tiled=False)
     else:
         # reduce-scatter(max/min): every chip scatters tile j to chip j,
-        # receives all chips' copies of its own tile, folds locally
+        # receives all chips' copies of its own tile, folds locally.
+        # Sub-f32 float sums take the same route so the fold can run in
+        # f32 (psum_scatter would accumulate on the wire dtype) — the
+        # transport stays at native width either way.
         gathered = lax.all_to_all(
             tiles[:, None, :], ax, split_axis=0, concat_axis=1, tiled=False
         )
-        shard = _AXIS_REDUCERS[op](gathered[0], axis=0)
+        if op == "sum":
+            shard = (
+                gathered[0].astype(jnp.float32).sum(axis=0)
+            ).astype(flat.dtype)
+        else:
+            shard = _AXIS_REDUCERS[op](gathered[0], axis=0)
     out = lax.all_gather(shard, ax, axis=0, tiled=False).reshape(-1)
     if pad:
         out = out[: out.size - pad]
@@ -528,10 +568,18 @@ def mla_pipelined_allreduce(
 # ---------------------------------------------------------------------------
 
 
-def _level_reduce_scatter(flat: jax.Array, axes, k: int, op: str) -> jax.Array:
+def _level_reduce_scatter(
+    flat: jax.Array, axes, k: int, op: str, *, f32_accum: bool = False
+) -> jax.Array:
     """One reduce-scatter level: pad to ``k``, scatter tile ``i`` to the
     rank of index ``i`` along ``axes`` (psum_scatter for sum, all_to_all
-    + fold for max/min — same byte transport)."""
+    + fold for max/min — same byte transport).
+
+    ``f32_accum=True`` marks a level that crosses the slow domain: a
+    sub-f32 float sum then routes through ``all_to_all`` + an f32 fold
+    (native wire width, wide accumulate) instead of letting
+    ``psum_scatter`` accumulate on the wire dtype.
+    """
     if k <= 1:
         return flat
     pad = (-flat.size) % k
@@ -540,11 +588,16 @@ def _level_reduce_scatter(flat: jax.Array, axes, k: int, op: str) -> jax.Array:
             [flat, jnp.full((pad,), _op_identity(op, flat.dtype))]
         )
     tiles = flat.reshape(k, -1)
-    if op == "sum":
+    wide = f32_accum and op == "sum" and _needs_f32_accum(flat.dtype)
+    if op == "sum" and not wide:
         return lax.psum_scatter(tiles, axes, scatter_dimension=0, tiled=False)
     gathered = lax.all_to_all(
         tiles[:, None, :], axes, split_axis=0, concat_axis=1, tiled=False
     )
+    if wide:
+        return (
+            gathered[0].astype(jnp.float32).sum(axis=0)
+        ).astype(flat.dtype)
     return _AXIS_REDUCERS[op](gathered[0], axis=0)
 
 
@@ -576,7 +629,7 @@ def mla_reduce_scatter(
     n = int(np.prod([compat.axis_size(ax) for ax in inter])) if inter else 1
     flat = x.reshape(-1)
     stripe = _level_reduce_scatter(flat, intra, ppn, op)
-    return _level_reduce_scatter(stripe, inter, n, op)
+    return _level_reduce_scatter(stripe, inter, n, op, f32_accum=True)
 
 
 def mla_allgather(
@@ -614,17 +667,19 @@ def mla_allgather(
 
 
 def flat_reduce_scatter(
-    x: jax.Array, *, axes: AxisNames, op: str = "sum"
+    x: jax.Array, *, axes: AxisNames, op: str = "sum", f32_accum: bool = False
 ) -> jax.Array:
     """Single-level (node-agnostic) reduce-scatter over the flattened
-    ``axes`` grid — the fallback engine when there is no slow domain."""
+    ``axes`` grid — the fallback engine when there is no slow domain.
+    ``f32_accum=True`` (set by the dispatcher when the flattened grid
+    does cross nodes) keeps sub-f32 sums accumulating in f32."""
     if op not in _MLA_OPS:
         raise NotImplementedError(
             f"flat_reduce_scatter supports {sorted(_MLA_OPS)}, got {op!r}"
         )
     ax = _as_tuple(axes)
     p = int(np.prod([compat.axis_size(a) for a in ax])) if ax else 1
-    return _level_reduce_scatter(x.reshape(-1), ax, p, op)
+    return _level_reduce_scatter(x.reshape(-1), ax, p, op, f32_accum=f32_accum)
 
 
 def flat_allgather(
@@ -651,7 +706,13 @@ def flat_allgather(
 
 def _psum_allreduce(x, *, inter_axes, intra_axes=(), op="sum", **_):
     _, named_reduce, _ = _OPS[op]
-    return named_reduce(x, _as_tuple(inter_axes) + _as_tuple(intra_axes))
+    inter = _as_tuple(inter_axes)
+    joint = inter + _as_tuple(intra_axes)
+    if op == "sum" and inter and _needs_f32_accum(x.dtype):
+        # the native psum accumulates on the wire dtype; a cross-node
+        # bf16 sum must run in f32 (spmd-lint numerics-flow rule)
+        return named_reduce(x.astype(jnp.float32), joint).astype(x.dtype)
+    return named_reduce(x, joint)
 
 
 def __getattr__(name: str):

@@ -66,6 +66,7 @@ __all__ = [
     "find_engine",
     "engine_schedule",
     "verify_engine",
+    "lint_lowering",
     "select_engine",
     "CommPolicy",
     "CommContext",
@@ -443,8 +444,17 @@ def register_engine(
     match-completeness, deadlock-freedom, exactly-once reduction and
     byte accounting — before it becomes visible; a failing engine is
     rolled back out of the registry and the registration raises with the
-    violation list.  ``verify=False`` opts a registration out (for
-    deliberately exotic schedules carrying their own proofs).
+    violation list.  ``verify=False`` opts a registration out of the
+    *schedule* checks (for deliberately exotic schedules carrying their
+    own proofs, and for native lowerings that have no schedule object).
+
+    **Lint-on-register.**  Under the same environment flag every
+    registration — ``verify=False`` included — is additionally traced
+    to a jaxpr and run through :func:`lint_lowering`
+    (:mod:`repro.analysis.spmd_lint`): collective uniformity, axis
+    discipline, numerics flow and schedule-vs-jaxpr byte equality.
+    There is no opt-out: an engine that cannot be traced and proven
+    hang-free does not enter the tournament.
     """
     if collective not in _REGISTRY:
         raise ValueError(
@@ -473,9 +483,14 @@ def register_engine(
             legacy=legacy,
         )
         _REGISTRY[collective][name] = spec
-        if verify and _verify_on_register_enabled():
+        if _verify_on_register_enabled():
             try:
-                _verify_spec_quick(spec)
+                if verify:
+                    _verify_spec_quick(spec)
+                # the jaxpr lint is NOT gated on ``verify``: engines
+                # without a schedule to verify (the native lowerings)
+                # still have an executed lowering to prove
+                _lint_spec_quick(spec)
             except Exception:
                 _REGISTRY[collective].pop(name, None)
                 raise
@@ -656,6 +671,161 @@ def verify_engine(
             + "\n".join(lines)
         )
     return reports
+
+
+#: grids the registration-time jaxpr lint sweeps (kept smaller than the
+#: schedule verifier's REGISTER_GRIDS — tracing is costlier than graph
+#: checks, and the jaxpr rules are grid-shape-generic)
+_LINT_GRIDS = ((2, 2), (3, 2))
+
+
+def lint_lowering(
+    name: str,
+    topology: Topology | None = None,
+    *,
+    n_nodes: int | None = None,
+    ppn: int | None = None,
+    elems: int | None = None,
+    dtype="float32",
+    op: str = "sum",
+    chunks: int = 1,
+    raise_on_violation: bool = True,
+):
+    """Statically lint a registered engine's *executed* lowering.
+
+    Traces the engine's ``execute`` to a jaxpr under an abstract axis
+    environment (no devices or mesh needed) and runs
+    :func:`repro.analysis.spmd_lint.lint_jaxpr` over it: collective
+    uniformity (the static hang detector), axis discipline, numerics
+    flow, and byte accounting — the jaxpr-recomputed inter-node bytes
+    per chip must equal the bound the engine's *schedule* declares,
+    closing the schedule → jaxpr link of the three-layer proof chain
+    (:mod:`repro.analysis`).
+
+    The byte bound is resolved from the engine's declared flags: a
+    non-ragged schedule builder gives the exact
+    ``max_internode_bytes_per_chip`` at any payload; ragged/chunked
+    engines are held to ``Topology.internode_lower_bound`` (exact when
+    ``elems`` divides evenly, which the default payload does); native
+    engines without a schedule are byte-audited report-only.
+
+    Returns the :class:`repro.analysis.spmd_lint.SpmdLintReport`;
+    raises ``ValueError`` listing every violation unless
+    ``raise_on_violation=False``.  Like :func:`verify_engine` this is
+    part of the registration gate — including for engines registered
+    with ``verify=False``, which have no schedule to verify but still
+    have a lowering to prove.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..analysis import spmd_lint as _sl
+
+    spec = find_engine(name)
+    if topology is not None:
+        n, p = topology.n_nodes, topology.ppn
+    elif n_nodes is not None and ppn is not None:
+        n, p = int(n_nodes), int(ppn)
+    else:
+        n, p = _LINT_GRIDS[0]
+    if n < spec.min_nodes or p < spec.min_ppn:
+        raise ValueError(
+            f"engine {name!r} needs at least "
+            f"{spec.min_nodes}x{spec.min_ppn}, got {n}x{p}"
+        )
+    eff_chunks = chunks if chunks > 1 else (2 if spec.chunked else 1)
+    # bind single mesh axis names; a caller topology with exactly one
+    # axis per level keeps its names, anything else (unbound, or
+    # multi-axis levels whose per-axis sizes a Topology doesn't carry)
+    # falls back to synthetic names — the lint rules only care that the
+    # axis *sizes* multiply out to the grid
+    inter = ("pod",)
+    intra = ("data",) if p > 1 else ()
+    if topology is not None:
+        if len(topology.inter_axes) == 1:
+            inter = topology.inter_axes
+        if len(topology.intra_axes) == 1 and p > 1:
+            intra = topology.intra_axes
+    topo = dataclasses.replace(
+        topology if topology is not None else Topology.of(n, p),
+        inter_axes=inter, intra_axes=intra,
+    )
+    dt = jnp.dtype(dtype)
+    if elems is None:
+        elems = n * p * eff_chunks * 4
+    elems = int(elems)
+
+    if spec.collective == "allgather":
+        shard = -(-(-(-elems // p)) // n)  # ceil(ceil(e/ppn)/n)
+        x = jax.ShapeDtypeStruct((shard,), dt)
+        fn = functools.partial(spec.execute, topology=topo, elems=elems)
+    else:
+        x = jax.ShapeDtypeStruct((elems,), dt)
+        if spec.collective == "reduce_scatter":
+            fn = functools.partial(spec.execute, topology=topo, op=op)
+        else:
+            fn = functools.partial(
+                spec.execute, topology=topo, op=op,
+                pipeline_chunks=eff_chunks,
+            )
+
+    declared = None
+    if spec.ragged or spec.chunked:
+        if elems % (n * p * eff_chunks) == 0:
+            declared = (
+                topo.internode_lower_bound(elems, spec.collective)
+                * dt.itemsize
+            )
+    elif spec.build_schedule is not None:
+        declared = engine_schedule(
+            name, n, p
+        ).max_internode_bytes_per_chip(elems * dt.itemsize)
+
+    axis_env = [(ax, n) for ax in inter] + [(ax, p) for ax in intra]
+    closed = jax.make_jaxpr(fn, axis_env=axis_env)(x)
+    report = _sl.lint_jaxpr(
+        closed,
+        axis_sizes=dict(axis_env),
+        inter_axes=inter,
+        intra_axes=intra,
+        declared_internode_bytes=declared,
+        label=f"{spec.collective}:{name}@{n}x{p}/{dt.name}",
+    )
+    if not report.ok and raise_on_violation:
+        lines = [
+            f"  [{v.rule}] {v.message}" for v in report.violations
+        ]
+        raise ValueError(
+            f"engine {name!r} lowering failed the spmd lint on "
+            f"{n}x{p} ({dt.name}):\n" + "\n".join(lines)
+        )
+    return report
+
+
+def _lint_spec_quick(spec: EngineSpec) -> None:
+    """The lint-on-register gate: trace and lint the engine's lowering
+    over the lint grids, raising (so the caller rolls the registry
+    back) on any violation.  Runs for *every* registration — the
+    ``verify=False`` natives have no schedule but do have a lowering."""
+    bad = []
+    for n, p in _LINT_GRIDS:
+        if n < spec.min_nodes or p < spec.min_ppn:
+            continue
+        r = lint_lowering(
+            spec.name, n_nodes=n, ppn=p, raise_on_violation=False
+        )
+        if not r.ok:
+            bad.append((n, p, r))
+    if bad:
+        lines = [
+            f"  ({n}x{p}) [{v.rule}] {v.message}"
+            for n, p, r in bad
+            for v in r.violations
+        ]
+        raise ValueError(
+            f"{spec.collective} engine {spec.name!r} lowering failed "
+            "the spmd lint on registration:\n" + "\n".join(lines)
+        )
 
 
 class Decision(NamedTuple):
@@ -876,7 +1046,10 @@ def _exec_mla_rs(x, *, topology, op="sum"):
 
 
 def _exec_flat_rs(x, *, topology, op="sum"):
-    return collectives.flat_reduce_scatter(x, axes=topology.axes, op=op)
+    return collectives.flat_reduce_scatter(
+        x, axes=topology.axes, op=op,
+        f32_accum=topology.n_nodes > 1,
+    )
 
 
 def _exec_mla_ag(x, *, topology, elems=None):

@@ -300,10 +300,12 @@ def _compressed_fused_allreduce(
         # compression semantics (and EF residuals) match any grid size
         scales = _wire_scale(flat, offsets, sizes, 0, (), qmax)
         w = transport.quantize_pack(
-            flat.reshape(1, E), scales, offsets=offsets, bits=bits
+            flat.reshape(1, E), scales, offsets=offsets, bits=bits,
+            donate_input=not with_err,
         )
         full = transport.unpack_dequantize(
-            w, scales, offsets=offsets, bits=bits, cols=E
+            w, scales, offsets=offsets, bits=bits, cols=E,
+            donate_input=True,
         ).reshape(-1)
         return split(full), scales, (flat - full if with_err else None)
 
@@ -330,9 +332,12 @@ def _compressed_fused_allreduce(
             [stripe, jnp.zeros((g * B - S,), jnp.float32)]
         )
     s1 = _wire_scale(stripe, offsets, sizes, base_stripe, wire_axes, qmax)
+    # the stripe buffer is only donated when EF is off — the error path
+    # re-reads it after the call (the lint's alias-donation rule proves
+    # this statically)
     w = transport.quantize_pack(
         stripe.reshape(g, B), s1, offsets=offsets, bits=bits,
-        base=base_stripe, row_stride=B,
+        base=base_stripe, row_stride=B, donate_input=not with_err,
     )
     # ---- RS half: packed all_to_all; every row lands on the same block
     # window (base + t*B, row_stride=0), unpack + exact f32 fold --------
@@ -343,7 +348,7 @@ def _compressed_fused_allreduce(
     blk = jnp.sum(
         transport.unpack_dequantize(
             recv, s1, offsets=offsets, bits=bits, cols=B,
-            base=block_base, row_stride=0,
+            base=block_base, row_stride=0, donate_input=True,
         ),
         axis=0,
     )
@@ -351,12 +356,12 @@ def _compressed_fused_allreduce(
     s2 = _wire_scale(blk, offsets, sizes, block_base, wire_axes, qmax)
     w2 = transport.quantize_pack(
         blk.reshape(1, B), s2, offsets=offsets, bits=bits,
-        base=block_base, row_stride=0,
+        base=block_base, row_stride=0, donate_input=not with_err,
     )
     gathered = lax.all_gather(w2[0], wire_axes, axis=0, tiled=False)
     stripe_sum = transport.unpack_dequantize(
         gathered, s2, offsets=offsets, bits=bits, cols=B,
-        base=base_stripe, row_stride=B,
+        base=base_stripe, row_stride=B, donate_input=True,
     ).reshape(-1)[:S]
     # ---- level 1 inverse: rebuild the flat sum inside the node ---------
     if pre > 1:
@@ -678,7 +683,7 @@ def _compressed_reduce_scatter(flat, scale, ctx: comm.CommContext):
         stripe = jnp.concatenate([stripe, jnp.zeros((n * B - S,), jnp.float32)])
     w = transport.quantize_pack(
         stripe.reshape(n, B), s1, offsets=offsets, bits=bits,
-        base=base, row_stride=B,
+        base=base, row_stride=B, donate_input=True,
     )
     recv = lax.all_to_all(
         w[:, None, :], topo.inter_axes, split_axis=0, concat_axis=1,
@@ -688,7 +693,7 @@ def _compressed_reduce_scatter(flat, scale, ctx: comm.CommContext):
     return jnp.sum(
         transport.unpack_dequantize(
             recv, s1, offsets=offsets, bits=bits, cols=B,
-            base=block_base, row_stride=0,
+            base=block_base, row_stride=0, donate_input=True,
         ),
         axis=0,
     )

@@ -166,6 +166,7 @@ def quantize_pack(
     impl: str = "pallas",
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
+    donate_input: bool = False,
 ) -> jax.Array:
     """Quantize-and-pack ``x`` (R, C) f32 into wire bytes in one pass.
 
@@ -175,6 +176,15 @@ def quantize_pack(
     the (L,) per-leaf scale vector, ``offsets`` the static leaf start
     indices, ``base``/``row_stride`` the global-index plumbing (module
     docstring).
+
+    ``donate_input=True`` declares that the caller is done with ``x``:
+    its buffer may be reused for the wire output.  A true
+    ``input_output_aliases`` is impossible here (the output dtype and
+    width differ from the input), so the declaration is carried in the
+    kernel *name* (``__donate<argnum>`` suffix) where the spmd lint's
+    alias-donation rule statically proves the donated operand is never
+    read again after the call.  Do **not** set it when the caller still
+    needs ``x`` (e.g. the error-feedback path re-reads the stripe).
     """
     offsets = tuple(int(o) for o in offsets)
     scales = jnp.asarray(scales, jnp.float32).reshape(-1)
@@ -193,8 +203,10 @@ def quantize_pack(
         _quant_kernel,
         offsets=offsets, bits=bits, block=block, row_stride=int(row_stride),
     )
+    name = f"quantize_pack_{bits}b" + ("__donate2" if donate_input else "")
     return pl.pallas_call(
         kern,
+        name=name,
         grid=(R, Cp // block),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
@@ -219,6 +231,7 @@ def unpack_dequantize(
     impl: str = "pallas",
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
+    donate_input: bool = False,
 ) -> jax.Array:
     """Inverse of :func:`quantize_pack`: wire bytes (R, Cw) back to
     (R, cols) f32 values (``q * scale``), slicing off the block padding.
@@ -227,6 +240,10 @@ def unpack_dequantize(
     global indices of the *received* rows — for all-to-all-received
     per-rank copies of one block that is ``row_stride=0`` (every row
     dequantizes with the same index window).
+
+    ``donate_input=True`` declares the received wire buffer dead after
+    this call (see :func:`quantize_pack` — the declaration rides in the
+    kernel name and is enforced by the spmd lint's alias-donation rule).
     """
     offsets = tuple(int(o) for o in offsets)
     scales = jnp.asarray(scales, jnp.float32).reshape(-1)
@@ -249,8 +266,12 @@ def unpack_dequantize(
         _dequant_kernel,
         offsets=offsets, bits=bits, block=block, row_stride=int(row_stride),
     )
+    name = (
+        f"unpack_dequantize_{bits}b" + ("__donate2" if donate_input else "")
+    )
     out = pl.pallas_call(
         kern,
+        name=name,
         grid=(R, Cw // wblock),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),

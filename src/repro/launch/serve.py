@@ -2,8 +2,20 @@
 
 A minimal production shape: requests are batched, the prompt is prefilled
 token-group-wise through ``decode_step`` (filling the KV/state caches),
-then decoded greedily.  Works for every decoder arch including the
+then decoded greedily inside one jitted ``lax.while_loop``
+(:func:`make_decode_loop`).  Works for every decoder arch including the
 hybrid/SSM families (their caches are states, not KV).
+
+The decode loop is the repo's first real workload for the spmd lint
+(:mod:`repro.analysis.spmd_lint`): with a ``CommContext`` bound, the
+early-exit predicate ("every sequence hit EOS") is agreed across the
+serving group with a tiny ``ctx.allreduce(..., op="min")`` each step.
+The seed-era shape — each rank testing only its *local* done flags —
+is exactly what the lint's collective-uniformity rule rejects: ranks
+would disagree on whether the next iteration (and any collective inside
+it) is reached, the static signature of a decode-time hang.  With
+``mesh`` given, :func:`serve_batch` shard_maps prefill + decode over
+the batch and routes the stop flag through the comm layer.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
@@ -18,10 +30,98 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from ..configs import get_config, reduced
+from ..core import comm
 from ..models import build_model
-from .steps import make_policy, make_serve_step
+from .steps import make_policy, make_serve_step  # noqa: F401  (re-export)
+
+
+def make_decode_loop(model, ctx: comm.CommContext | None = None, *,
+                     gen_len: int, eos_id: int | None = None):
+    """Build the jitted greedy decode loop ``(params, cache, tok) ->
+    (B, gen_len) tokens``.
+
+    ``tok`` is the (B, 1) first generated token (argmax of the last
+    prefill logits).  With ``eos_id`` set the loop exits early once
+    every sequence has emitted it; with a ``ctx`` whose topology has
+    bound axes, "every sequence" means *across the whole serving
+    group*: the local all-done flag is min-reduced through
+    ``ctx.allreduce`` so the ``while_loop`` predicate is uniform on
+    every rank — the lint-clean form of distributed early exit.
+    """
+    use_comm = ctx is not None and bool(
+        ctx.topology.inter_axes or ctx.topology.intra_axes
+    )
+
+    def _group_all(flag: jax.Array) -> jax.Array:
+        # pinned to the native psum engine, not the latency dispatch: a
+        # value that steers control flow must be *provably* uniform, and
+        # only a whole-group reduction primitive clears rank variance in
+        # the lint's dataflow lattice.  NAP's masked-permute output is
+        # uniform algorithmically but not provably so — the uniformity
+        # rule (correctly) rejects it as a while predicate.
+        if not use_comm:
+            return flag
+        return ctx.allreduce(flag, op="min", algorithm="psum")
+
+    def decode(params, cache, tok):
+        B = tok.shape[0]
+        out0 = jnp.zeros((B, gen_len), jnp.int32)
+        done0 = jnp.zeros((B,), bool)
+        # group-agreed stop flag: starts "not done", updated from the
+        # min-reduced all-done flag so every rank sees the same value
+        stop0 = jnp.zeros((), jnp.float32)
+
+        def cond(carry):
+            t, _tok, _cache, _out, _done, stop = carry
+            return (t < gen_len) & (stop < 0.5)
+
+        def body(carry):
+            t, tok, cache, out, done, stop = carry
+            out = lax.dynamic_update_slice(out, tok, (0, t))
+            logits, cache = model.decode_step(params, cache, tok)
+            nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+            if eos_id is not None:
+                done = done | (tok[:, 0] == eos_id)
+                nxt = jnp.where(done[:, None], eos_id, nxt)
+                stop = _group_all(jnp.all(done).astype(jnp.float32))
+            return t + 1, nxt, cache, out, done, stop
+
+        carry = (jnp.zeros((), jnp.int32), tok, cache, out0, done0, stop0)
+        _, _, _, out, _, _ = lax.while_loop(cond, body, carry)
+        return out
+
+    return decode
+
+
+def make_serve_shard(model, ctx: comm.CommContext | None, *, gen_len: int,
+                     max_len: int, eos_id: int | None = None):
+    """The per-shard serve program: prefill (``fori_loop``) + decode
+    loop, everything traced — this is the function the ``--spmd`` sweep
+    lints as "the serve decode step"."""
+    decode = make_decode_loop(model, ctx, gen_len=gen_len, eos_id=eos_id)
+
+    def shard_fn(params, prompts):
+        _b, p = prompts.shape
+        cache = model.init_decode(
+            params, prompts.shape[0], max_len=max_len, batch=None
+        )
+        logits, cache = model.decode_step(params, cache, prompts[:, :1])
+
+        def pre_body(t, carry):
+            _logits, cache = carry
+            step_tok = lax.dynamic_slice_in_dim(prompts, t, 1, axis=1)
+            return model.decode_step(params, cache, step_tok)
+
+        logits, cache = lax.fori_loop(1, p, pre_body, (logits, cache))
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return decode(params, cache, tok)
+
+    return shard_fn
 
 
 def serve_batch(
@@ -32,23 +132,60 @@ def serve_batch(
     gen_len: int,
     max_len: int | None = None,
     batch_extras: dict | None = None,
+    mesh=None,
+    ctx: comm.CommContext | None = None,
+    eos_id: int | None = None,
 ):
-    """prompts: (B, P) int32. Returns (B, gen_len) generated tokens."""
-    B, P = prompts.shape
-    max_len = max_len or (P + gen_len)
-    cache = model.init_decode(params, B, max_len=max_len, batch=batch_extras)
-    step = jax.jit(model.decode_step)
+    """prompts: (B, P) int32. Returns (B, gen_len) generated tokens.
 
-    logits = None
-    for t in range(P):  # prefill via teacher forcing (cache fill)
-        logits, cache = step(params, cache, prompts[:, t : t + 1])
-    out = []
-    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-    for _ in range(gen_len):
-        out.append(tok)
-        logits, cache = step(params, cache, tok)
+    Single-host default: prefill with a jitted per-token step, then run
+    :func:`make_decode_loop`.  With ``mesh`` the batch is sharded over
+    the mesh's joint axes and the whole prefill + decode runs inside
+    one ``shard_map``, with the decode early-exit routed through
+    ``ctx`` (built from the mesh if not given) — the comm-layer path
+    the ``--spmd`` sweep lints.
+    """
+    B, P_len = prompts.shape
+    max_len = max_len or (P_len + gen_len)
+
+    if mesh is None:
+        cache = model.init_decode(
+            params, B, max_len=max_len, batch=batch_extras
+        )
+        step = jax.jit(model.decode_step)
+        logits = None
+        for t in range(P_len):  # prefill via teacher forcing (cache fill)
+            logits, cache = step(params, cache, prompts[:, t : t + 1])
         tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+        decode = jax.jit(
+            make_decode_loop(model, ctx, gen_len=gen_len, eos_id=eos_id)
+        )
+        return decode(params, cache, tok)
+
+    if batch_extras is not None:
+        raise NotImplementedError(
+            "batch_extras (encoder frames) are not supported on the "
+            "meshed serve path yet"
+        )
+    if ctx is None:
+        ctx = comm.CommContext(comm.Topology.from_mesh(mesh))
+    joint = ctx.topology.axes
+    shards = int(np.prod([mesh.shape[a] for a in joint]))
+    if B % shards:
+        raise ValueError(
+            f"batch {B} does not shard over {shards} chips ({joint})"
+        )
+    shard_fn = make_serve_shard(
+        model, ctx, gen_len=gen_len, max_len=max_len, eos_id=eos_id
+    )
+    fn = compat.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(P(), P(joint)),
+        out_specs=P(joint),
+        check_vma=False,
+    )
+    return jax.jit(fn)(params, prompts)
 
 
 def main() -> None:
@@ -58,6 +195,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -79,7 +217,8 @@ def main() -> None:
         }
     t0 = time.time()
     gen = serve_batch(
-        model, params, prompts, gen_len=args.gen, batch_extras=extras
+        model, params, prompts, gen_len=args.gen, batch_extras=extras,
+        eos_id=args.eos_id,
     )
     dt = time.time() - t0
     toks = args.batch * (args.prompt_len + args.gen)

@@ -183,6 +183,77 @@ def test_assert_clean_raises_with_listing():
 
 
 # ---------------------------------------------------------------------------
+# replica-group partition rule
+# ---------------------------------------------------------------------------
+
+
+def test_replica_groups_clean_partition_passes():
+    assert hlo_lint.lint_replica_groups(CLEAN_S8, num_devices=8) == []
+
+
+def test_replica_groups_overlap_fires():
+    txt = _module(
+        "%wire = s8[288]{0} all-reduce(%p0), "
+        "replica_groups={{0,1},{1,2},{3,4},{5,6,7}}, to_apply=%add"
+    )
+    vs = hlo_lint.lint_replica_groups(txt, num_devices=8)
+    assert any("overlap" in v.message and "[1]" in v.message for v in vs)
+    assert all(v.rule == "replica-groups" for v in vs)
+
+
+def test_replica_groups_gap_fires():
+    # 4-device module whose only group covers {0, 1}: ranks 2 and 3
+    # never join — the classic static hang
+    txt = """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  %wire = f32[16]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  ROOT %out = f32[16]{0} copy(%wire)
+}
+"""
+    vs = hlo_lint.lint_replica_groups(txt, num_devices=4)
+    assert any("gap" in v.message and "[2, 3]" in v.message for v in vs)
+
+
+def test_replica_groups_out_of_range_fires():
+    txt = """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  %wire = f32[16]{0} all-reduce(%p0), replica_groups={{0,1},{2,9}}, to_apply=%add
+  ROOT %out = f32[16]{0} copy(%wire)
+}
+"""
+    vs = hlo_lint.lint_replica_groups(txt, num_devices=4)
+    assert any("outside" in v.message and "[9]" in v.message for v in vs)
+    assert any("gap" in v.message and "[3]" in v.message for v in vs)
+
+
+def test_replica_groups_iota_product_checked():
+    good = """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  %wire = f32[16]{0} all-reduce(%p0), replica_groups=[2,4], to_apply=%add
+  ROOT %out = f32[16]{0} copy(%wire)
+}
+"""
+    assert hlo_lint.lint_replica_groups(good, num_devices=8) == []
+    bad = good.replace("replica_groups=[2,4]", "replica_groups=[2,3]")
+    vs = hlo_lint.lint_replica_groups(bad, num_devices=8)
+    assert vs and "cover 6 devices, module has 8" in vs[0].message
+
+
+def test_replica_groups_implicit_all_devices_clean():
+    txt = """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  %wire = f32[16]{0} all-reduce(%p0), to_apply=%add
+  ROOT %out = f32[16]{0} copy(%wire)
+}
+"""
+    assert hlo_lint.lint_replica_groups(txt, num_devices=8) == []
+
+
+# ---------------------------------------------------------------------------
 # stable-lowering rule
 # ---------------------------------------------------------------------------
 

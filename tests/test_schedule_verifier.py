@@ -311,17 +311,48 @@ def test_register_engine_rejects_unverifiable_schedule(monkeypatch):
 
 
 def test_register_engine_verify_opt_out(monkeypatch):
+    """``verify=False`` skips the *schedule* invariants only.  The PR-8
+    jaxpr lint still runs and closes the byte link against the builder's
+    declared bound, so a broken builder is caught anyway — the opt-out
+    is for native lowerings with no schedule object, which register
+    cleanly as long as the lowering itself lints."""
+    import jax.numpy as jnp
+    from jax import lax
+
     monkeypatch.setenv("REPRO_VERIFY_ON_REGISTER", "1")
+
+    def native_psum(x, *, topology, op="sum", pipeline_chunks=1):
+        joint = topology.axes
+        if op == "sum" and jnp.issubdtype(x.dtype, jnp.floating) and (
+            jnp.dtype(x.dtype).itemsize < 4
+        ):
+            return lax.psum(x.astype(jnp.float32), joint).astype(x.dtype)
+        return {"sum": lax.psum, "max": lax.pmax, "min": lax.pmin}[op](
+            x, joint
+        )
+
     try:
+        comm.register_engine(
+            "native_optout",
+            execute=native_psum,
+            ops={"sum", "max", "min"},
+            verify=False,
+        )
+        assert "native_optout" in comm.registered_engines("allreduce")
+    finally:
+        comm._REGISTRY["allreduce"].pop("native_optout", None)
+
+    # a broken schedule builder no longer slips through the opt-out:
+    # the lint recomputes inter-node bytes from the traced lowering and
+    # holds them against the (corrupted) declared bound
+    with pytest.raises(ValueError, match="spmd lint"):
         comm.register_engine(
             "broken_rd_optout",
             execute=lambda x, **k: x,
             build_schedule=_dup_message_builder,
             verify=False,
         )
-        assert "broken_rd_optout" in comm.registered_engines("allreduce")
-    finally:
-        comm._REGISTRY["allreduce"].pop("broken_rd_optout", None)
+    assert "broken_rd_optout" not in comm.registered_engines("allreduce")
 
 
 def test_register_engine_no_verify_when_env_unset(monkeypatch):
