@@ -125,6 +125,38 @@ def quick_smoke() -> int:
             f"quick_compressed_int{bits}_s{size * 4},{us:.3f},"
             f"{'ok' if ok else 'MISMATCH'}"
         )
+
+    # serving spine smoke: continuous batching through the meshed
+    # tensor-parallel decode path (repro.serve), staggered arrivals
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serve import PromptBuckets, ServeEngine
+
+    cfg = reduced(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    engine = ServeEngine(
+        model, params, num_slots=8, max_len=24,
+        buckets=PromptBuckets([8]), mesh=mesh,
+    )
+    disp = engine.dispatch_report()
+    reqs = [engine.submit([1, 2, 3], 6), engine.submit([4, 5], 4)]
+    engine.step()
+    reqs.append(engine.submit([6, 7, 8, 9], 5))  # joins in flight
+    t0 = time.perf_counter()
+    out = engine.run()
+    dt = time.perf_counter() - t0
+    ok = (
+        all(len(out[r.rid]) == r.max_new_tokens for r in reqs)
+        and engine.idle
+        and disp["logits_allreduce"]["engine"] == "nap"
+    )
+    failures += 0 if ok else 1
+    us = dt / max(engine.n_decode_steps, 1) * 1e6
+    print(
+        f"quick_serve_engine_{disp['logits_allreduce']['engine']},"
+        f"{us:.3f},{'ok' if ok else 'MISMATCH'}"
+    )
     return failures
 
 

@@ -1,10 +1,17 @@
-"""Batched serving example: prefill + cached greedy decode.
+"""Continuous-batching serving example on the `repro.serve` engine.
 
 Serves three very different cached architectures — a dense GQA model
 (KV cache), the RWKV6 SSM (constant-size state), and whisper (enc-dec
-with cross-attention) — through the same ``decode_step`` API, and checks
-the sliding-window ring buffer by decoding past the window on a
-gemma2-style local+global miniature.
+with cross-attention: per-request encoder frames ride the request's
+``extras`` and land in the slot cache at prefill) — through the same
+:class:`repro.serve.ServeEngine`, with requests of *different* prompt
+lengths and token budgets joining the batch in flight (the seed-era
+version of this example padded everything into one fixed batch).
+
+Each engine uses padded prompt buckets, so the three distinct prompt
+lengths compile at most two prefill programs, and the staggered second
+wave of requests is admitted into slots freed by the first — continuous
+batching, not batch-at-a-time.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -12,46 +19,75 @@ Run:  PYTHONPATH=src python examples/serve_decode.py
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, reduced
-from repro.launch.serve import serve_batch
 from repro.models import build_model
+from repro.serve import PromptBuckets, ServeEngine
 
 
-def demo(arch: str, batch=2, prompt_len=12, gen=8):
+def demo(arch: str, gen=8):
     cfg = reduced(ARCHS[arch])
     model = build_model(cfg)
     params = jax.jit(model.init)(jax.random.PRNGKey(0))
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size
-    ).astype(jnp.int32)
-    extras = None
+
+    extras_template = None
     if cfg.encoder_layers:
-        extras = {
-            "frames": jax.random.normal(
-                jax.random.PRNGKey(2), (batch, 16, cfg.d_model)
-            ).astype(jnp.dtype(cfg.dtype))
+        extras_template = {
+            "frames": jax.ShapeDtypeStruct((1, 16, cfg.d_model), cfg.dtype)
         }
+    engine = ServeEngine(
+        model, params,
+        num_slots=2,                      # smaller than the request count:
+        max_len=32,                       # the 3rd request joins in flight
+        buckets=PromptBuckets([8, 16]),
+        extras_template=extras_template,
+    )
+
+    rng = np.random.default_rng(1)
+    def make_extras():
+        if extras_template is None:
+            return None
+        return {
+            "frames": jax.numpy.asarray(
+                rng.standard_normal((1, 16, cfg.d_model)), cfg.dtype
+            )
+        }
+
     t0 = time.time()
-    gen_toks = serve_batch(
-        model, params, prompts, gen_len=gen, batch_extras=extras,
-        max_len=prompt_len + gen + 4,
+    # staggered arrivals with heterogeneous prompt lengths and budgets
+    reqs = [
+        engine.submit(
+            rng.integers(0, cfg.vocab_size, size=n).tolist(),
+            max_new_tokens=g, extras=make_extras(),
+        )
+        for n, g in [(12, gen), (5, gen + 2)]
+    ]
+    engine.step()  # both admitted; third arrives mid-decode
+    reqs.append(
+        engine.submit(
+            rng.integers(0, cfg.vocab_size, size=9).tolist(),
+            max_new_tokens=gen - 2, extras=make_extras(),
+        )
     )
+    out = engine.run()
     dt = time.time() - t0
+
+    kind = "state" if cfg.family == "ssm" else "kv"
+    toks = sum(len(v) for v in out.values())
     print(
-        f"{arch:24s} cache={'state' if cfg.family=='ssm' else 'kv':5s} "
-        f"generated {gen_toks.shape[1]} toks/req in {dt:5.2f}s -> "
-        f"{np.asarray(gen_toks[0, :6])}"
+        f"{arch:24s} cache={kind:5s} {len(out)} reqs, {toks} toks "
+        f"in {dt:5.2f}s -> {out[reqs[0].rid][:6]}"
     )
-    assert np.isfinite(dt) and gen_toks.shape == (batch, gen)
+    for req in reqs:
+        assert req.state == "finished" and len(req.generated) == req.max_new_tokens
+    assert engine.idle
 
 
 def main():
     for arch in ["qwen2-72b", "rwkv6-1.6b", "whisper-tiny", "gemma2-27b"]:
         demo(arch)
-    print("\nall families served through one decode_step API")
+    print("\nall families served through one continuous-batching engine")
 
 
 if __name__ == "__main__":

@@ -312,6 +312,42 @@ def run_spmd_sweep() -> dict:
         )
     )
 
+    # -- 5. the serving spine's scheduler-driven decode slice ------------
+    # (repro.serve): slot-stacked continuous-batching decode with the
+    # tensor-parallel logits head — allgather + latency-regime allreduce
+    # + psum-min early exit, the full decode-collective set per token
+    import functools
+
+    from repro.serve import Scheduler
+    from repro.serve import decode as serve_decode
+
+    scheduler = Scheduler(8)
+    group = topo.group
+    b_max = max(scheduler.shard_geometry(group))  # ragged_splits geometry
+    b1_cache_sds = jax.eval_shape(
+        functools.partial(serve_model.init_decode, batch_size=1, max_len=10),
+        params_sds,
+    )
+    cache_sds = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((b_max,) + s.shape, s.dtype),
+        b1_cache_sds,
+    )
+    tok_sds = jax.ShapeDtypeStruct((b_max, 1), jnp.int32)
+    active_sds = jax.ShapeDtypeStruct((b_max,), jnp.bool_)
+    slice_fn = serve_decode.make_decode_slice(
+        serve_model, comm.CommContext(topo), slice_len=4, eos_id=1
+    )
+    closed = jax.make_jaxpr(slice_fn, axis_env=axis_env)(
+        params_sds, cache_sds, tok_sds, active_sds
+    )
+    record(
+        spmd_lint.lint_jaxpr(
+            closed, axis_sizes=axis_sizes,
+            inter_axes=("pod",), intra_axes=("data",),
+            label="serve_engine[continuous batching]",
+        )
+    )
+
     return {
         "grids": [list(g) for g in _SPMD_GRIDS],
         "dtypes": list(_SPMD_DTYPES),

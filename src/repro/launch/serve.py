@@ -3,19 +3,28 @@
 A minimal production shape: requests are batched, the prompt is prefilled
 token-group-wise through ``decode_step`` (filling the KV/state caches),
 then decoded greedily inside one jitted ``lax.while_loop``
-(:func:`make_decode_loop`).  Works for every decoder arch including the
-hybrid/SSM families (their caches are states, not KV).
+(:func:`repro.serve.decode.make_decode_loop`).  Works for every decoder
+arch including the hybrid/SSM families (their caches are states, not KV).
 
-The decode loop is the repo's first real workload for the spmd lint
-(:mod:`repro.analysis.spmd_lint`): with a ``CommContext`` bound, the
-early-exit predicate ("every sequence hit EOS") is agreed across the
-serving group with a tiny ``ctx.allreduce(..., op="min")`` each step.
-The seed-era shape — each rank testing only its *local* done flags —
-is exactly what the lint's collective-uniformity rule rejects: ranks
-would disagree on whether the next iteration (and any collective inside
-it) is reached, the static signature of a decode-time hang.  With
-``mesh`` given, :func:`serve_batch` shard_maps prefill + decode over
-the batch and routes the stop flag through the comm layer.
+This module is now a **thin wrapper over the serving spine**
+(:mod:`repro.serve`): the decode loop, the lint-clean EOS early exit and
+the tensor-parallel head all live there, shared with the
+continuous-batching :class:`repro.serve.ServeEngine`.  What remains
+here is the fixed-batch driver shape — every request enters and leaves
+together — kept because it is the right tool for offline eval sweeps
+and as the serial reference the engine's continuous batching is tested
+bitwise against.  For request-level serving (admission, in-flight
+insertion, replica routing) use :mod:`repro.serve`.
+
+With a ``CommContext`` bound, the early-exit predicate ("every sequence
+hit EOS") is agreed across the serving group with a tiny
+``ctx.allreduce(..., op="min")`` each step.  The seed-era shape — each
+rank testing only its *local* done flags — is exactly what the spmd
+lint's collective-uniformity rule rejects: ranks would disagree on
+whether the next iteration (and any collective inside it) is reached,
+the static signature of a decode-time hang.  With ``mesh`` given,
+:func:`serve_batch` shard_maps prefill + decode over the batch and
+routes the stop flag through the comm layer.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
@@ -37,65 +46,8 @@ from .. import compat
 from ..configs import get_config, reduced
 from ..core import comm
 from ..models import build_model
+from ..serve.decode import make_decode_loop  # noqa: F401  (re-export)
 from .steps import make_policy, make_serve_step  # noqa: F401  (re-export)
-
-
-def make_decode_loop(model, ctx: comm.CommContext | None = None, *,
-                     gen_len: int, eos_id: int | None = None):
-    """Build the jitted greedy decode loop ``(params, cache, tok) ->
-    (B, gen_len) tokens``.
-
-    ``tok`` is the (B, 1) first generated token (argmax of the last
-    prefill logits).  With ``eos_id`` set the loop exits early once
-    every sequence has emitted it; with a ``ctx`` whose topology has
-    bound axes, "every sequence" means *across the whole serving
-    group*: the local all-done flag is min-reduced through
-    ``ctx.allreduce`` so the ``while_loop`` predicate is uniform on
-    every rank — the lint-clean form of distributed early exit.
-    """
-    use_comm = ctx is not None and bool(
-        ctx.topology.inter_axes or ctx.topology.intra_axes
-    )
-
-    def _group_all(flag: jax.Array) -> jax.Array:
-        # pinned to the native psum engine, not the latency dispatch: a
-        # value that steers control flow must be *provably* uniform, and
-        # only a whole-group reduction primitive clears rank variance in
-        # the lint's dataflow lattice.  NAP's masked-permute output is
-        # uniform algorithmically but not provably so — the uniformity
-        # rule (correctly) rejects it as a while predicate.
-        if not use_comm:
-            return flag
-        return ctx.allreduce(flag, op="min", algorithm="psum")
-
-    def decode(params, cache, tok):
-        B = tok.shape[0]
-        out0 = jnp.zeros((B, gen_len), jnp.int32)
-        done0 = jnp.zeros((B,), bool)
-        # group-agreed stop flag: starts "not done", updated from the
-        # min-reduced all-done flag so every rank sees the same value
-        stop0 = jnp.zeros((), jnp.float32)
-
-        def cond(carry):
-            t, _tok, _cache, _out, _done, stop = carry
-            return (t < gen_len) & (stop < 0.5)
-
-        def body(carry):
-            t, tok, cache, out, done, stop = carry
-            out = lax.dynamic_update_slice(out, tok, (0, t))
-            logits, cache = model.decode_step(params, cache, tok)
-            nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-            if eos_id is not None:
-                done = done | (tok[:, 0] == eos_id)
-                nxt = jnp.where(done[:, None], eos_id, nxt)
-                stop = _group_all(jnp.all(done).astype(jnp.float32))
-            return t + 1, nxt, cache, out, done, stop
-
-        carry = (jnp.zeros((), jnp.int32), tok, cache, out0, done0, stop0)
-        _, _, _, out, _, _ = lax.while_loop(cond, body, carry)
-        return out
-
-    return decode
 
 
 def make_serve_shard(model, ctx: comm.CommContext | None, *, gen_len: int,

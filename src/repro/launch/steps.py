@@ -279,13 +279,14 @@ def make_prefill_step(model, *, tail: int = 128):
     return prefill_step
 
 
-def make_serve_step(model):
-    def serve_step(params, cache, tokens):
-        logits, new_cache = model.decode_step(params, cache, tokens)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return next_tok[:, None], new_cache
+def make_serve_step(model, ctx=None):
+    """One-token cached greedy decode — the serving spine's shared step
+    (:func:`repro.serve.decode.greedy_step`).  With ``ctx`` the head is
+    the tensor-parallel ``CommContext``-routed path; without, the
+    model's own head (identical contraction, local)."""
+    from ..serve.decode import greedy_step
 
-    return serve_step
+    return greedy_step(model, ctx)
 
 
 # ---------------------------------------------------------------------------

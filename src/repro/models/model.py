@@ -37,6 +37,13 @@ class Model:
     logits: Callable          # (params, batch) -> full logits (small use!)
     init_decode: Callable     # (params, batch, max_len[, batch_data]) -> cache
     decode_step: Callable     # (params, cache, tokens) -> (logits, cache)
+    # the head-split decode pair used by the serving spine's tensor-
+    # parallel logits path (repro.serve): ``decode_hidden`` is
+    # ``decode_step`` up to (and including) the final norm, without the
+    # LM head; ``head_weights`` exposes the (D, V) head matrix so a
+    # contraction-sharded head can be computed outside the model.
+    decode_hidden: Callable = None  # (params, cache, tokens) -> (hidden, cache)
+    head_weights: Callable = None   # (params) -> (D, V)
 
 
 def _dtype(cfg):
@@ -203,8 +210,15 @@ def build_model(cfg, policy: ShardingPolicy | None = None) -> Model:
             )
         return cache
 
-    def decode_step(params, cache, tokens):
-        """tokens: (B, 1) int32 (or (B, 1, D) embeds for VLM stubs)."""
+    def decode_hidden(params, cache, tokens):
+        """tokens: (B, 1) int32 (or (B, 1, D) embeds for VLM stubs).
+
+        One cached decode step up to (and including) the final norm —
+        everything but the LM head.  ``decode_step`` is exactly this
+        plus the head einsum, so a caller that computes the head itself
+        (the serving spine's contraction-sharded tensor-parallel logits
+        path) advances the cache identically to the plain step.
+        """
         index = cache["index"]
         if tokens.ndim == 3:
             x = tokens.astype(dtype)
@@ -216,13 +230,18 @@ def build_model(cfg, policy: ShardingPolicy | None = None) -> Model:
             cfg=cfg, policy=policy, enc_out=cache.get("enc_out"),
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        new_cache = dict(cache, index=index + 1, stack=new_stack)
+        return x, new_cache
+
+    def decode_step(params, cache, tokens):
+        """tokens: (B, 1) int32 (or (B, 1, D) embeds for VLM stubs)."""
+        x, new_cache = decode_hidden(params, cache, tokens)
         logits = jnp.einsum(
             "bsd,dv->bsv", x, _head_weights(params, cfg).astype(x.dtype),
             preferred_element_type=jnp.float32,
         )
         logits = softcap(logits, cfg.final_logit_softcap)
         logits = policy.act(logits, kind="logits")
-        new_cache = dict(cache, index=index + 1, stack=new_stack)
         return logits, new_cache
 
     return Model(
@@ -234,4 +253,6 @@ def build_model(cfg, policy: ShardingPolicy | None = None) -> Model:
         logits=logits_fn,
         init_decode=init_decode,
         decode_step=decode_step,
+        decode_hidden=decode_hidden,
+        head_weights=lambda params: _head_weights(params, cfg),
     )

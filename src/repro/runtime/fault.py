@@ -31,7 +31,12 @@ from ..checkpoint.manager import CheckpointManager
 
 log = logging.getLogger("repro.runtime")
 
-__all__ = ["StragglerMonitor", "ResumableLoop", "elastic_remesh"]
+__all__ = [
+    "StragglerMonitor",
+    "ReplicaHealth",
+    "ResumableLoop",
+    "elastic_remesh",
+]
 
 
 @dataclasses.dataclass
@@ -76,6 +81,46 @@ class StragglerMonitor:
             return event
         self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
         return event
+
+
+class ReplicaHealth:
+    """Straggler-signal-driven health state for one serving replica.
+
+    Wraps a :class:`StragglerMonitor` with the hysteresis the serving
+    router needs: a straggler event marks the replica **degraded** (the
+    router stops routing to it and reroutes its queue); ``recovery``
+    consecutive clean steps mark it healthy again.  A plain counter
+    would flap — one fast step after a stall is not a recovery.
+    """
+
+    def __init__(
+        self,
+        monitor: StragglerMonitor | None = None,
+        *,
+        recovery: int = 5,
+    ):
+        if recovery < 1:
+            raise ValueError(f"recovery must be >= 1, got {recovery}")
+        self.monitor = monitor or StragglerMonitor()
+        self.recovery = recovery
+        self.healthy = True
+        self._clean = 0
+        self.n_degraded = 0  # degradation episodes (router telemetry)
+
+    def record(self, step: int, duration: float) -> bool:
+        """Feed one step time; returns the post-update health."""
+        event = self.monitor.record(step, duration)
+        if event is not None:
+            if self.healthy:
+                self.n_degraded += 1
+            self.healthy = False
+            self._clean = 0
+        elif not self.healthy:
+            self._clean += 1
+            if self._clean >= self.recovery:
+                self.healthy = True
+                self._clean = 0
+        return self.healthy
 
 
 class ResumableLoop:

@@ -1,0 +1,84 @@
+"""repro.serve — the production serving spine.
+
+Continuous batching over topology-aware decode collectives: the
+request-level system around the paper's latency-regime result.  Decode
+collectives are tiny (KBs per token — exactly NAP's ``log_ppn(n)``-step
+regime) and fire thousands of times per request, so the node-aware
+small-message win compounds per token; this package is the machinery
+that keeps those collectives saturated with real traffic.
+
+Three layers (each its own module):
+
+* :mod:`repro.serve.scheduler` — host-side request lifecycle: admission
+  control, FIFO slot assignment, in-flight insertion/eviction at
+  decode-step boundaries, saxml-style padded prompt buckets;
+* :mod:`repro.serve.decode` — the traced decode path: slot-stacked
+  cached decode with a ``CommContext``-routed tensor-parallel logits
+  head (latency-regime allreduce → NAP on multi-node grids, ``mla_ag``
+  hidden gather, psum-min EOS early exit — the lint-clean form);
+* :mod:`repro.serve.router` — multi-replica data-parallel routing by
+  outstanding-token load, reroute on
+  :class:`repro.runtime.fault.ReplicaHealth` straggler signals.
+
+Quickstart — one replica, continuous batching::
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serve import PromptBuckets, ServeEngine
+
+    cfg = reduced(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    eng = ServeEngine(
+        model, params, num_slots=4, max_len=64,
+        buckets=PromptBuckets([8, 16, 32]), eos_id=7,
+    )
+    r0 = eng.submit([1, 2, 3], max_new_tokens=16)
+    r1 = eng.submit(list(range(20)), max_new_tokens=8)   # joins in flight
+    tokens = eng.run()          # {rid: [tok, ...]}, continuous batching
+
+Multi-chip (tensor-parallel decode over a mesh)::
+
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 4), ("pod", "data"))   # 2 nodes x 4 lanes
+    eng = ServeEngine(model, params, num_slots=8, max_len=64,
+                      eos_id=7, mesh=mesh)
+    eng.submit([1, 2, 3], 16); tokens = eng.run()
+    eng.dispatch_report()   # logits allreduce -> "nap" on this grid
+
+Multi-replica routing::
+
+    from repro.serve import Router
+
+    router = Router([eng_a, eng_b])
+    router.submit([1, 2, 3], 16)        # least outstanding-token load
+    router.observe_step(0, step, dt)    # straggler -> reroute queue
+
+The decode path passes the repo's three static gates (schedule
+verifier, SPMD jaxpr lint, HLO wire-lint) — swept by
+``python -m repro.analysis --spmd`` as the ``serve_engine`` workload.
+"""
+
+from .decode import (
+    greedy_step,
+    make_decode_loop,
+    make_decode_slice,
+    make_tp_head,
+)
+from .engine import ServeEngine
+from .router import Router
+from .scheduler import PromptBuckets, Request, Scheduler
+
+__all__ = [
+    "ServeEngine",
+    "Router",
+    "Scheduler",
+    "PromptBuckets",
+    "Request",
+    "greedy_step",
+    "make_decode_loop",
+    "make_decode_slice",
+    "make_tp_head",
+]

@@ -1,0 +1,123 @@
+"""Multi-replica data-parallel request router for the serving spine.
+
+Spreads requests over independent serving replicas (each a
+:class:`repro.serve.engine.ServeEngine`, or anything exposing the same
+``submit`` / ``outstanding_tokens`` / ``scheduler`` surface) by
+**outstanding-token load** — the token budget still owed by a replica's
+queue plus its active slots, the quantity that actually predicts its
+drain time under continuous batching (queue *length* does not: one
+queued 4k-token request outweighs ten 8-token ones).
+
+Health is driven by :class:`repro.runtime.fault.ReplicaHealth` straggler
+signals: feed per-slice step times in with :meth:`observe_step`; when a
+replica degrades (a straggler event), the router stops routing to it
+and **reroutes its queued requests** to healthy replicas — queued only:
+active requests keep their slots (their KV state lives on the degraded
+replica; rerouting them would re-prefill, usually slower than riding
+out the stall).  ``recovery`` consecutive clean steps readmit it.
+"""
+
+from __future__ import annotations
+
+from ..runtime.fault import ReplicaHealth, StragglerMonitor
+from .scheduler import REJECTED, Request
+
+__all__ = ["Router"]
+
+
+class Router:
+    """Load-based router over serving replicas.
+
+    Args:
+      replicas: the serving engines (index order is the tiebreak order).
+      health: optional per-replica :class:`ReplicaHealth`; by default
+        each replica gets one with a fresh :class:`StragglerMonitor`.
+    """
+
+    def __init__(
+        self,
+        replicas,
+        *,
+        health: list[ReplicaHealth] | None = None,
+        straggler_threshold: float = 2.0,
+        recovery: int = 5,
+    ):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = list(replicas)
+        if health is None:
+            health = [
+                ReplicaHealth(
+                    StragglerMonitor(threshold=straggler_threshold),
+                    recovery=recovery,
+                )
+                for _ in self.replicas
+            ]
+        if len(health) != len(self.replicas):
+            raise ValueError("one ReplicaHealth per replica")
+        self.health = health
+        self.placement: dict[int, int] = {}  # rid -> replica index
+        self.n_rerouted = 0
+
+    # -- routing -----------------------------------------------------------
+
+    def _eligible(self) -> list[int]:
+        healthy = [
+            i for i, h in enumerate(self.health) if h.healthy
+        ]
+        # all degraded: route anyway (stalled beats dropped)
+        return healthy or list(range(len(self.replicas)))
+
+    def pick(self) -> int:
+        """Least-loaded eligible replica (lowest index breaks ties)."""
+        return min(
+            self._eligible(),
+            key=lambda i: (self.replicas[i].outstanding_tokens(), i),
+        )
+
+    def submit(self, prompt, max_new_tokens: int, **kw) -> Request:
+        i = self.pick()
+        req = self.replicas[i].submit(prompt, max_new_tokens, **kw)
+        if req.state != REJECTED:
+            self.placement[req.rid] = i
+        return req
+
+    # -- health signals ----------------------------------------------------
+
+    def observe_step(self, replica: int, step: int, duration: float) -> bool:
+        """Feed one decode-slice wall-clock for ``replica``; on a
+        health transition to degraded, reroute its queued requests.
+        Returns the replica's post-update health."""
+        was = self.health[replica].healthy
+        ok = self.health[replica].record(step, duration)
+        if was and not ok:
+            self.reroute(replica)
+        return ok
+
+    def reroute(self, replica: int) -> int:
+        """Move ``replica``'s queued (not yet active) requests to the
+        healthiest least-loaded peers.  Returns how many moved."""
+        eligible = [i for i in self._eligible() if i != replica]
+        if not eligible:
+            return 0
+        moved = 0
+        for req in self.replicas[replica].scheduler.drain_queue():
+            dst = min(
+                eligible,
+                key=lambda i: (self.replicas[i].outstanding_tokens(), i),
+            )
+            out = self.replicas[dst].scheduler.enqueue(req)
+            if out.state != REJECTED:
+                self.placement[req.rid] = dst
+                moved += 1
+        self.n_rerouted += moved
+        return moved
+
+    # -- views -------------------------------------------------------------
+
+    def loads(self) -> list[int]:
+        return [r.outstanding_tokens() for r in self.replicas]
+
+    @property
+    def idle(self) -> bool:
+        return all(r.idle for r in self.replicas)

@@ -1274,6 +1274,67 @@ def check_comm_reduce_scatter_allgather():
     record("comm_sharded_grad_sync", ok)
 
 
+def check_serve_continuous_batching():
+    """Continuous batching on the meshed tensor-parallel serving engine
+    is bitwise identical to serial one-request-at-a-time decoding
+    through the same engine: slot scatter, padded-bucket prefill and
+    mid-flight admission must not perturb any request's token stream.
+    Also pins the decode-collective dispatch: per-token logits land on
+    the latency-regime engine (NAP), the hidden gather on mla_ag, the
+    EOS min-reduce on native psum."""
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serve import PromptBuckets, ServeEngine
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    cfg = reduced(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    def engine(num_slots):
+        return ServeEngine(
+            model, params, num_slots=num_slots, max_len=24,
+            buckets=PromptBuckets([4, 8]), mesh=mesh,
+        )
+
+    # heterogeneous prompts (two buckets) and budgets
+    workload = [
+        ([3, 1, 4], 5),
+        ([1, 5, 9, 2, 6], 4),
+        ([2, 7, 1, 8], 6),
+    ]
+
+    # serial reference: one request at a time through the same TP path
+    serial = engine(10)
+    ref = []
+    for prompt, budget in workload:
+        req = serial.submit(prompt, budget)
+        out = serial.run()
+        ref.append(out[req.rid])
+
+    # continuous batching: 10 logical slots ragged over the 8-chip
+    # group (ragged_splits -> b_max=2, padded to 16 rows); the third
+    # request joins while the first two are mid-decode
+    cont = engine(10)
+    reqs = [cont.submit(p, b) for p, b in workload[:2]]
+    cont.step()
+    reqs.append(cont.submit(*workload[2]))
+    out = cont.run()
+
+    ok = cont.idle and all(
+        out[req.rid] == ref[i] for i, req in enumerate(reqs)
+    )
+    disp = cont.dispatch_report()
+    ok &= disp["logits_allreduce"]["engine"] == "nap"
+    ok &= disp["hidden_allgather"]["engine"] == "mla_ag"
+    ok &= disp["eos_min_reduce"]["engine"] == "psum"
+    record(
+        "serve_continuous_batching", ok,
+        tokens=[out[r.rid] for r in reqs],
+        logits_engine=disp["logits_allreduce"]["engine"],
+    )
+
+
 def main():
     assert jax.device_count() == N_DEV, jax.device_count()
     check_allreduce_correctness()
@@ -1300,6 +1361,7 @@ def main():
     check_nap_extensions()
     check_comm_context_equivalence()
     check_comm_reduce_scatter_allgather()
+    check_serve_continuous_batching()
     print("RESULTS_JSON:" + json.dumps(RESULTS))
 
 

@@ -90,6 +90,7 @@ _EXPECTED = [
     "comm_ctx_grad_sync_bitwise",
     "comm_rs_ag_roundtrip",
     "comm_sharded_grad_sync",
+    "serve_continuous_batching",
 ]
 
 

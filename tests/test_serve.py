@@ -1,0 +1,476 @@
+"""Serving-spine tests: scheduler invariants, buckets, router, engine.
+
+The scheduler is pure host-side Python, so its invariants are fuzzed
+directly over request arrival traces (hypothesis when available, the
+deterministic ``_hypothesis_compat`` sweep otherwise):
+
+* no slot leaks — free + active always partitions the slot range;
+* FIFO fairness under saturation — admission order is arrival order;
+* silence after the end — finished/evicted/rejected requests never
+  gain another token.
+
+The engine-level check (single device) asserts continuous batching is
+**bitwise identical** to the fixed-batch serial driver
+(:func:`repro.launch.serve.serve_batch`), including through padded
+prompt buckets and mid-flight admission.  The multidevice (meshed,
+tensor-parallel) version of the same property lives in
+``_multidevice_checks.py::check_serve_continuous_batching``.
+"""
+
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serve.scheduler import (
+    ACTIVE,
+    EVICTED,
+    FINISHED,
+    QUEUED,
+    REJECTED,
+    PromptBuckets,
+    Scheduler,
+)
+
+# ---------------------------------------------------------------------------
+# PromptBuckets
+
+
+def test_bucket_len_picks_smallest_holding_bucket():
+    b = PromptBuckets([16, 4, 8, 8])  # dedup + sort
+    assert b.lengths == (4, 8, 16)
+    assert b.bucket_len(1) == 4
+    assert b.bucket_len(4) == 4
+    assert b.bucket_len(5) == 8
+    assert b.bucket_len(16) == 16
+    with pytest.raises(ValueError):
+        b.bucket_len(17)
+
+
+def test_bucket_validation():
+    with pytest.raises(ValueError):
+        PromptBuckets([])
+    with pytest.raises(ValueError):
+        PromptBuckets([0, 8])
+    with pytest.raises(ValueError):
+        PromptBuckets.geometric(64, factor=1)
+
+
+def test_geometric_ladder_covers_max_len():
+    b = PromptBuckets.geometric(100, start=8, factor=2)
+    assert b.lengths == (8, 16, 32, 64, 100)
+    assert b.max_len == 100
+    for n in range(1, 101):
+        assert b.bucket_len(n) >= n
+    # trace count is logarithmic, not linear
+    assert len(b.lengths) <= 8
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: directed unit tests
+
+
+def test_fifo_admission_under_saturation():
+    s = Scheduler(2)
+    reqs = [s.submit([1], 1) for _ in range(5)]
+    admitted = s.admit()
+    assert [r.rid for r in admitted] == [reqs[0].rid, reqs[1].rid]
+    assert [r.slot for r in admitted] == [0, 1]
+    # finishing one request admits exactly the queue head into its slot
+    for nxt in (2, 3, 4):
+        done = s.record_token(0, 7)
+        assert done is not None and done.state == FINISHED
+        newly = s.admit()
+        assert [r.rid for r in newly] == [reqs[nxt].rid]
+        assert newly[0].slot == 0
+        s.check_invariants()
+
+
+def test_admission_control_rejects_past_queue_bound():
+    s = Scheduler(1, max_queue=2)
+    ok = [s.submit([1], 1) for _ in range(2)]
+    bad = s.submit([1], 1)
+    assert all(r.state == QUEUED for r in ok)
+    assert bad.state == REJECTED and bad.remaining == 0
+    assert s.n_rejected == 1
+    # rejected requests never enter the queue or a slot
+    s.admit()
+    assert bad.slot is None
+    s.check_invariants()
+
+
+def test_eos_and_budget_finish():
+    s = Scheduler(1, eos_id=99)
+    r1 = s.submit([1], 4)
+    s.admit()
+    assert s.record_token(0, 5) is None
+    assert s.record_token(0, 99) is r1  # EOS beats remaining budget
+    assert r1.generated == [5, 99] and r1.state == FINISHED
+    r2 = s.submit([1], 2)
+    s.admit()
+    s.record_token(0, 1)
+    assert s.record_token(0, 2) is r2  # budget exhaustion
+    assert r2.generated == [1, 2]
+
+
+def test_tokens_for_free_slots_are_dropped():
+    s = Scheduler(2)
+    s.submit([1], 3)
+    s.admit()
+    # slot 1 was never filled; the engine decodes it unconditionally
+    assert s.record_token(1, 123) is None
+    s.check_invariants()
+
+
+def test_evicted_requests_never_emit_tokens():
+    s = Scheduler(1)
+    r1 = s.submit([1], 5)
+    r2 = s.submit([2], 5)
+    s.admit()
+    s.record_token(0, 11)
+    s.evict(r1.rid)
+    assert r1.state == EVICTED and r1.slot is None
+    n_before = len(r1.generated)
+    # the token the engine already computed for the freed slot is dropped
+    assert s.record_token(0, 12) is None
+    assert len(r1.generated) == n_before
+    # eviction of a queued request removes it before it ever runs
+    s.evict(r2.rid)
+    assert r2.state == EVICTED and r2.generated == []
+    assert s.admit() == [] and s.idle
+    # terminal evict is a no-op
+    assert s.evict(r1.rid) is r1
+    s.check_invariants()
+
+
+def test_outstanding_tokens_counts_queue_and_slots():
+    s = Scheduler(1)
+    r1 = s.submit([1], 5)
+    s.submit([2], 3)
+    assert s.outstanding_tokens() == 8
+    s.admit()
+    s.record_token(0, 1)
+    assert s.outstanding_tokens() == 7
+    s.evict(r1.rid)
+    assert s.outstanding_tokens() == 3
+
+
+def test_shard_geometry_is_ragged_splits():
+    from repro.core import napalg
+
+    s = Scheduler(10)
+    for group in (1, 2, 3, 4, 8):
+        geo = s.shard_geometry(group)
+        assert geo == napalg.ragged_splits(10, group)
+        assert sum(geo) == 10 and len(geo) == group
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Scheduler(0)
+    s = Scheduler(1)
+    with pytest.raises(ValueError):
+        s.submit([], 1)
+    with pytest.raises(ValueError):
+        s.submit([1], 0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: fuzz over arrival traces
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    num_slots=st.integers(min_value=1, max_value=4),
+    max_queue=st.one_of(st.none(), st.integers(min_value=0, max_value=3)),
+)
+def test_scheduler_trace_fuzz(seed, num_slots, max_queue):
+    rng = random.Random(seed)
+    eos = 99 if rng.random() < 0.5 else None
+    s = Scheduler(num_slots, max_queue=max_queue, eos_id=eos)
+    submitted = []          # arrival order
+    admitted_order = []     # admission order
+    frozen = {}             # rid -> generated length at terminal transition
+
+    def note_terminals():
+        for req in s.requests.values():
+            if req.done:
+                frozen.setdefault(req.rid, len(req.generated))
+                # silence after the end: a terminal request's token list
+                # must never grow again
+                assert len(req.generated) == frozen[req.rid], req
+                assert req.slot is None
+                assert req.remaining == 0
+
+    for _ in range(80):
+        op = rng.random()
+        if op < 0.35:
+            req = s.submit(
+                [rng.randrange(100) + 1 for _ in range(rng.randrange(1, 5))],
+                rng.randrange(1, 4),
+            )
+            if req.state != REJECTED:
+                submitted.append(req.rid)
+        elif op < 0.55:
+            # FIFO: admit() must take exactly the current queue head(s)
+            expect = [r.rid for r in list(s.queue)[: len(s.free_slots)]]
+            got = [r.rid for r in s.admit()]
+            assert got == expect
+            admitted_order.extend(got)
+        elif op < 0.85:
+            # one decode step: the engine records a token for EVERY slot
+            for slot in range(num_slots):
+                s.record_token(slot, rng.choice([99, rng.randrange(98)]))
+        else:
+            live = [
+                r.rid for r in s.requests.values() if not r.done
+            ]
+            if live:
+                s.evict(rng.choice(live))
+        s.check_invariants()
+        note_terminals()
+
+    # FIFO fairness: admissions happen in arrival order (eviction from
+    # the queue only removes entries; it never reorders survivors)
+    pos = {rid: i for i, rid in enumerate(submitted)}
+    order = [pos[rid] for rid in admitted_order]
+    assert order == sorted(order)
+    # no slot leak survives the whole trace
+    assert len(s.free_slots) + len(s.active()) == num_slots
+    # every admitted request was actually submitted (never rejected)
+    assert set(admitted_order) <= set(submitted)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    num_slots=st.integers(min_value=1, max_value=3),
+)
+def test_scheduler_drains_to_idle(seed, num_slots):
+    """Any backlog drains to idle under admit+decode steps alone."""
+    rng = random.Random(seed)
+    s = Scheduler(num_slots)
+    reqs = [
+        s.submit([1 + rng.randrange(9)], rng.randrange(1, 5))
+        for _ in range(rng.randrange(1, 9))
+    ]
+    steps = 0
+    while not s.idle:
+        s.admit()
+        for slot in range(num_slots):
+            s.record_token(slot, rng.randrange(50))
+        s.check_invariants()
+        steps += 1
+        assert steps < 1000, "scheduler failed to drain"
+    for r in reqs:
+        assert r.state == FINISHED
+        assert len(r.generated) == r.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Router + replica health
+
+
+class _FakeReplica:
+    """Minimal replica surface the Router needs (no device state)."""
+
+    def __init__(self, num_slots, **kw):
+        self.scheduler = Scheduler(num_slots, **kw)
+
+    def submit(self, prompt, max_new_tokens, **kw):
+        return self.scheduler.submit(prompt, max_new_tokens, **kw)
+
+    def outstanding_tokens(self):
+        return self.scheduler.outstanding_tokens()
+
+    @property
+    def idle(self):
+        return self.scheduler.idle
+
+
+def test_router_spreads_by_outstanding_tokens():
+    from repro.serve import Router
+
+    r = Router([_FakeReplica(2), _FakeReplica(2)])
+    big = r.submit([1], 100)        # -> replica 0 (tie, lowest index)
+    small = r.submit([1], 1)        # -> replica 1 (less loaded)
+    nxt = r.submit([1], 1)          # -> replica 1 again (2 < 100)
+    assert r.placement[big.rid] == 0
+    assert r.placement[small.rid] == 1
+    assert r.placement[nxt.rid] == 1
+    assert r.loads() == [100, 2]
+
+
+def test_router_rejected_requests_are_not_placed():
+    from repro.serve import Router
+
+    r = Router([_FakeReplica(1, max_queue=0)])
+    req = r.submit([1], 1)
+    assert req.state == REJECTED
+    assert req.rid not in r.placement
+
+
+def test_replica_health_hysteresis():
+    from repro.runtime.fault import ReplicaHealth, StragglerMonitor
+
+    h = ReplicaHealth(
+        StragglerMonitor(threshold=2.0, warmup=3), recovery=3
+    )
+    for step in range(4):
+        assert h.record(step, 1.0)
+    assert not h.record(4, 10.0)        # straggler event -> degraded
+    assert h.n_degraded == 1
+    assert not h.record(5, 1.0)         # one clean step is not recovery
+    assert not h.record(6, 1.0)
+    assert h.record(7, 1.0)             # 3 consecutive clean -> healthy
+    # a new event restarts the clean counter
+    assert not h.record(8, 50.0)
+    assert not h.record(9, 1.0)
+    assert h.n_degraded == 2
+
+
+def test_router_reroutes_queue_on_straggler():
+    from repro.serve import Router
+
+    a, b = _FakeReplica(1), _FakeReplica(1)
+    r = Router([a, b], straggler_threshold=2.0, recovery=2)
+    # saturate replica 0 and build its queue (directly: the router
+    # itself would spread this backlog to the emptier replica 1)
+    first = r.submit([1], 50)
+    a.scheduler.admit()
+    queued = [a.submit([1], 50) for _ in range(3)]
+    # straggler signal on replica 0 past monitor warmup
+    for step in range(4):
+        assert r.observe_step(0, step, 1.0)
+    assert not r.observe_step(0, 4, 25.0)
+    # queued requests moved to the healthy peer; the active one stayed
+    assert not r.health[0].healthy
+    assert a.scheduler.queue == type(a.scheduler.queue)()
+    assert first.state == ACTIVE and r.placement[first.rid] == 0
+    moved = [q for q in queued if q.state == QUEUED]
+    assert moved and all(r.placement[q.rid] == 1 for q in moved)
+    assert r.n_rerouted == len(moved)
+    # while degraded, new submissions avoid replica 0
+    assert r.placement[r.submit([1], 1).rid] == 1
+    # recovery hysteresis readmits it
+    r.observe_step(0, 5, 1.0)
+    r.observe_step(0, 6, 1.0)
+    assert r.health[0].healthy
+
+
+def test_router_all_degraded_still_routes():
+    from repro.serve import Router
+    from repro.runtime.fault import ReplicaHealth, StragglerMonitor
+
+    h = [
+        ReplicaHealth(StragglerMonitor(warmup=1), recovery=2)
+        for _ in range(2)
+    ]
+    r = Router([_FakeReplica(1), _FakeReplica(1)], health=h)
+    for i in (0, 1):
+        r.observe_step(i, 0, 1.0)
+        r.observe_step(i, 1, 1.0)
+        r.observe_step(i, 2, 100.0)
+    assert not any(x.healthy for x in r.health)
+    req = r.submit([1], 1)  # stalled beats dropped
+    assert req.state == QUEUED and req.rid in r.placement
+
+
+# ---------------------------------------------------------------------------
+# Engine (single device): continuous batching == serial fixed batch
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b"])
+def test_engine_bitwise_matches_serial_serve_batch(arch):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import serve_batch
+    from repro.models import build_model
+    from repro.serve import PromptBuckets, ServeEngine
+
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    prompts = np.array([[3, 1, 4], [1, 5, 9], [2, 6, 5]], np.int32)
+    gen = 5
+
+    # serial reference: every request decoded in one fixed batch
+    ref = np.asarray(
+        serve_batch(
+            model, params, jax.numpy.asarray(prompts),
+            gen_len=gen, max_len=16,
+        )
+    )
+
+    # continuous batching: 2 slots for 3 requests, the third joins a
+    # slot freed in flight; prompts ride a padded bucket (3 -> 8)
+    engine = ServeEngine(
+        model, params, num_slots=2, max_len=16,
+        buckets=PromptBuckets([8]),
+    )
+    reqs = [
+        engine.submit(list(p), b)
+        for p, b in zip(prompts, (gen, gen - 2, gen))
+    ]
+    out = engine.run()
+    assert engine.idle
+    for i, req in enumerate(reqs):
+        want = ref[i, : req.max_new_tokens].tolist()
+        assert out[req.rid] == want, (i, out[req.rid], want)
+    # per-decode-step fit rows were recorded with the logits payload
+    # (all b_max slot rows ride one allreduce, f32)
+    rows = engine.fit_rows()
+    want_bytes = engine.b_max * cfg.vocab_size * 4
+    assert rows and all(
+        n == want_bytes and t > 0 and k == 1 for (n, t, k) in rows
+    )
+
+
+def test_engine_eos_early_finish():
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serve import PromptBuckets, ServeEngine
+
+    cfg = reduced(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    # discover the greedy continuation, then declare its 3rd token EOS
+    probe = ServeEngine(
+        model, params, num_slots=1, max_len=16, buckets=PromptBuckets([4])
+    )
+    free_run = probe.run_one = probe.submit([3, 1, 4], 5)
+    toks = probe.run()[free_run.rid]
+    eos = toks[2]
+    if toks.index(eos) != 2:  # eos token appeared earlier: shift target
+        eos = toks[toks.index(eos)]
+
+    engine = ServeEngine(
+        model, params, num_slots=1, max_len=16,
+        buckets=PromptBuckets([4]), eos_id=eos,
+    )
+    req = engine.submit([3, 1, 4], 5)
+    out = engine.run()
+    assert out[req.rid] == toks[: toks.index(eos) + 1]
+    assert req.state == FINISHED and engine.idle
+
+
+def test_engine_extras_template_is_enforced():
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = reduced(get_config("minicpm-2b"))
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, num_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        engine.submit([1], 1, extras={"frames": None})
