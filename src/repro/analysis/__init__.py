@@ -1,8 +1,20 @@
 """Static analysis for the collective engine tournament.
 
-Three layers prove an executed lowering correct *before* it races — a
-proof chain from the abstract schedule down to the compiled module:
+Four layers prove the serving stack correct *before* it races — a
+proof chain from the host protocol down to the compiled module:
 
+0. **Protocol model check** (:mod:`repro.analysis.protocol_check`) —
+   explicit-state bounded exhaustive exploration of the serving
+   control plane: the **real** ``Scheduler``/``Router``/
+   ``ReplicaHealth`` objects driven through every interleaving of
+   submit/admit/token/EOS/evict/degrade/recover/reroute/replica-loss
+   at small scope, with canonical-state dedup and request-id symmetry
+   reduction.  Safety (conservation, single ownership, slot
+   accounting, FIFO under reroute, binding acceptance, silence after
+   terminal states, hysteresis boundaries) plus quiescence-style
+   liveness at every reachable state; violations come out as minimal
+   replayable event traces.  This proves the *protocol* that fires
+   the collectives is right.
 1. **Schedule verifier** (:mod:`repro.analysis.schedule_verifier`) —
    given any built ``NapSchedule``/``P2PSchedule``, statically proves
    match-completeness, deadlock-freedom, exactly-once reduction
@@ -27,6 +39,12 @@ proof chain from the abstract schedule down to the compiled module:
    count budgets, and a no-silent-recompile rule.  This proves what
    XLA actually emitted.
 
+Layer 0 is tied to layer 2 by the decode-geometry link
+(:func:`repro.analysis.protocol_check.verify_decode_geometry_link`):
+the slot occupancies the protocol can reach are proved to be exactly
+the ragged slot geometry the linted decode slice is swept at, so the
+checked protocol and the linted lowering talk about the same shapes.
+
 Layers 1 and 2 both run at engine registration (see
 :func:`repro.core.comm.register_engine`): the schedule verifier for
 ``verify=True`` engines, the jaxpr lint for **every** engine — natives
@@ -36,6 +54,14 @@ Quickstart::
 
     from repro.core import comm
     from repro.analysis import verify_schedule, spmd_lint
+    from repro.analysis import protocol_check as pc
+
+    # layer 0: exhaustively check the serving control plane
+    report = pc.check_protocol(pc.CheckConfig(replicas=2, slots=2,
+                                              queue=1, requests=4))
+    assert report.ok, report.violations[0].to_row()
+    # a violation's trace replays as a pytest:
+    #   pc.assert_trace_clean(cfg, trace)  /  pc.assert_trace_violates(...)
 
     # layer 1: verify one schedule directly
     sched = comm.engine_schedule("mla", n_nodes=5, ppn=4, elems=193)
@@ -58,6 +84,8 @@ Quickstart::
     #   PYTHONPATH=src python -m repro.analysis --json reports/BENCH_7.json
     #   PYTHONPATH=src python -m repro.analysis --spmd \\
     #       --json reports/BENCH_8.json
+    #   PYTHONPATH=src python -m repro.analysis --protocol \\
+    #       --json reports/BENCH_10.json
 
 This package imports neither ``jax`` nor ``repro.core.comm`` at module
 scope: the registry calls *into* the verifier on registration, and the
@@ -94,8 +122,24 @@ from .spmd_lint import (  # noqa: F401
     lint_jaxpr,
     lint_traced,
 )
+from .protocol_check import (  # noqa: F401
+    CheckConfig,
+    CheckReport,
+    assert_trace_clean,
+    assert_trace_violates,
+    check_protocol,
+    run_trace,
+    verify_decode_geometry_link,
+)
 
 __all__ = [
+    "CheckConfig",
+    "CheckReport",
+    "assert_trace_clean",
+    "assert_trace_violates",
+    "check_protocol",
+    "run_trace",
+    "verify_decode_geometry_link",
     "GRID_MATRIX",
     "PAYLOAD_ELEMS",
     "REGISTER_GRIDS",

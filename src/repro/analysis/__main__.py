@@ -22,10 +22,20 @@ verification table:
    over the compressed grad-sync step, the data-parallel train step and
    the serve decode loop.
 
+4. **Protocol model check** (``--protocol``, the ``BENCH_10.json``
+   gate) — layer 0 of the proof chain: exhaustive explicit-state
+   exploration of the serving control plane (scheduler + router +
+   replica health, the real objects) over the small-scope grid in
+   :data:`PROTOCOL_GRID`; fails on any safety/liveness violation *or*
+   on state-space coverage regressing below the recorded floor, and
+   re-asserts the layer-0 ↔ layer-2 link (admissible slot occupancies
+   == the ragged geometry the decode slice is linted at).
+
 Exits non-zero on any violation, so CI can gate on it::
 
     PYTHONPATH=src python -m repro.analysis --json reports/BENCH_7.json
     PYTHONPATH=src python -m repro.analysis --spmd --json reports/BENCH_8.json
+    PYTHONPATH=src python -m repro.analysis --protocol --json reports/BENCH_10.json
 
 ``--skip-hlo`` runs only the (fast, jax-free) schedule sweep;
 ``--skip-schedules`` only the lint.
@@ -318,12 +328,15 @@ def run_spmd_sweep() -> dict:
     # + psum-min early exit, the full decode-collective set per token
     import functools
 
-    from repro.serve import Scheduler
     from repro.serve import decode as serve_decode
 
-    scheduler = Scheduler(8)
-    group = topo.group
-    b_max = max(scheduler.shard_geometry(group))  # ragged_splits geometry
+    from .protocol_check import verify_decode_geometry_link
+
+    # layer-0 <-> layer-2 link: the batch width this slice is linted at
+    # comes from the protocol checker's admissible-occupancy closure
+    # over a real Scheduler — the linted shape IS the proved geometry
+    link = verify_decode_geometry_link(8, topo.group)
+    b_max = link["b_max"]  # max of the ragged_splits slot geometry
     b1_cache_sds = jax.eval_shape(
         functools.partial(serve_model.init_decode, batch_size=1, max_len=10),
         params_sds,
@@ -359,6 +372,90 @@ def run_spmd_sweep() -> dict:
     }
 
 
+#: the --protocol small-scope grid: (config, recorded state floor).
+#: Exploration is deterministic, so the floors are the exact counts at
+#: the time of recording; CI fails if coverage ever regresses below
+#: them (a canonicalization or event-alphabet change silently shrinking
+#: the explored space would otherwise look like a pass).
+def _protocol_grid():
+    from .protocol_check import CheckConfig
+
+    return (
+        # pure scheduler protocol, single replica, full closure
+        (CheckConfig(replicas=1, slots=2, queue=2, requests=4,
+                     budgets=(2, 1), faults=False, losses=False,
+                     depth=None), 230),
+        # two replicas with the full fault alphabet, full closure
+        (CheckConfig(replicas=2, slots=1, queue=1, requests=3,
+                     budgets=(2, 1), recovery=2, depth=None), 3591),
+        # three replicas: reroute fan-out + double loss, bounded depth
+        (CheckConfig(replicas=3, slots=1, queue=1, requests=4,
+                     budgets=(1,), recovery=2, depth=8), 9890),
+        # the acceptance scope: 2 replicas x 3 slots x 5 requests to
+        # event depth 12 (the ISSUE-10 floor), full fault alphabet
+        (CheckConfig(replicas=2, slots=3, queue=2, requests=5,
+                     budgets=(2, 1), recovery=2, depth=12), 77796),
+    )
+
+
+def run_protocol_sweep() -> dict:
+    """Exhaustive layer-0 sweep over the small-scope protocol grid."""
+    from . import protocol_check as pc
+
+    rows = []
+    n_violations = 0
+    coverage_failures = 0
+    for cfg, floor in _protocol_grid():
+        rep = pc.check_protocol(cfg)
+        row = rep.to_row()
+        row["min_states"] = floor
+        row["coverage_ok"] = rep.states >= floor
+        rows.append(row)
+        n_violations += len(rep.violations)
+        if not row["coverage_ok"]:
+            coverage_failures += 1
+        status = (
+            "FAIL"
+            if rep.violations or not row["coverage_ok"]
+            else "ok"
+        )
+        scope = (
+            f"r{cfg.replicas} s{cfg.slots} q{cfg.queue} "
+            f"n{cfg.requests} d{cfg.depth or 'closure'}"
+        )
+        print(
+            f"  {scope:28s} {rep.states:7d} states "
+            f"(floor {floor:7d}) {rep.transitions:8d} transitions "
+            f"dedup {rep.dedup_ratio:5.2f}x depth {rep.depth:2d} "
+            f"{len(rep.violations):2d} violations  {status}"
+        )
+        for v in rep.violations:
+            print(f"    !! [{v.rule}] {v.detail}")
+            print(f"       trace: {list(v.trace)}")
+
+    # layer-0 <-> layer-2 link: the occupancies the protocol admits are
+    # exactly the ragged slot geometry the --spmd sweep lints the
+    # decode slice at (same Scheduler.shard_geometry call, both sides)
+    from repro.core import comm
+
+    topo = comm.Topology(2, 4, inter_axes=("pod",), intra_axes=("data",))
+    link = pc.verify_decode_geometry_link(8, topo.group)
+    print(
+        f"  layer-2 link: occupancies 0..{max(link['admissible_occupancies'])}"
+        f" on geometry {link['geometry']} -> b_max={link['b_max']}  ok"
+    )
+    return {
+        "rows": rows,
+        "layer2_link": link,
+        "coverage_failures": coverage_failures,
+        "states_total": sum(r["states"] for r in rows),
+        "transitions_total": sum(r["transitions"] for r in rows),
+        # the CI gate: protocol violations AND coverage regressions
+        # both fail the run
+        "violations": n_violations + coverage_failures,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis", description=__doc__
@@ -369,13 +466,20 @@ def main(argv=None) -> int:
     ap.add_argument("--spmd", action="store_true",
                     help="run the SPMD jaxpr lint sweep (BENCH_8) "
                          "instead of the BENCH_7 passes")
+    ap.add_argument("--protocol", action="store_true",
+                    help="run the layer-0 protocol model check over "
+                         "the small-scope grid (BENCH_10)")
     ap.add_argument("--skip-hlo", action="store_true",
                     help="schedule sweep only (fast, jax-free)")
     ap.add_argument("--skip-schedules", action="store_true",
                     help="HLO lint only")
     args = ap.parse_args(argv)
 
-    if args.spmd:
+    if args.protocol:
+        report = {"bench": "BENCH_10", "ok": True}
+        print("protocol model check (layer 0):")
+        report["protocol"] = run_protocol_sweep()
+    elif args.spmd:
         report = {"bench": "BENCH_8", "ok": True}
         print("SPMD jaxpr lint sweep:")
         report["spmd_lint"] = run_spmd_sweep()
@@ -390,7 +494,9 @@ def main(argv=None) -> int:
 
     n_violations = sum(
         report.get(k, {}).get("violations", 0)
-        for k in ("schedule_verification", "hlo_lint", "spmd_lint")
+        for k in (
+            "schedule_verification", "hlo_lint", "spmd_lint", "protocol",
+        )
     )
     report["ok"] = n_violations == 0
 

@@ -91,6 +91,12 @@ class ReplicaHealth:
     router stops routing to it and reroutes its queue); ``recovery``
     consecutive clean steps mark it healthy again.  A plain counter
     would flap — one fast step after a stall is not a recovery.
+
+    The boundary is exact — healthy flips back on the ``recovery``-th
+    consecutive clean step, never one early or late — and is pinned at
+    every reachable state by the layer-0 protocol checker
+    (:mod:`repro.analysis.protocol_check`), which asserts the
+    post-state of each clean step against ``recovery`` directly.
     """
 
     def __init__(

@@ -55,9 +55,22 @@ Multi-replica routing::
     router = Router([eng_a, eng_b])
     router.submit([1, 2, 3], 16)        # least outstanding-token load
     router.observe_step(0, step, dt)    # straggler -> reroute queue
+    router.fail_replica(0)              # replica death -> re-plan onto
+                                        # survivors (queued + demoted
+                                        # actives, never dropped)
+    router.evict(rid)                   # placement-accurate cancel
 
-The decode path passes the repo's three static gates (schedule
-verifier, SPMD jaxpr lint, HLO wire-lint) — swept by
+The control plane holds two protocol guarantees end to end:
+**acceptance is binding** (a request once QUEUED is never silently
+REJECTED by a reroute into a full peer) and **single ownership** (a
+live rid is registered with exactly one scheduler, so evictions can
+never race a reroute through a stale registry entry).
+
+The decode path passes the repo's four static gates — the layer-0
+protocol model check (``python -m repro.analysis --protocol``
+exhaustively explores this package's scheduler/router/health protocol
+at small scope; see :mod:`repro.analysis.protocol_check`), then the
+schedule verifier, SPMD jaxpr lint and HLO wire-lint, swept by
 ``python -m repro.analysis --spmd`` as the ``serve_engine`` workload.
 """
 

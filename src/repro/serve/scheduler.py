@@ -228,16 +228,30 @@ class Scheduler:
         self.queue.append(req)
         return req
 
-    def enqueue(self, req: Request) -> Request:
-        """Re-queue an existing QUEUED request (router rerouting path)."""
+    def enqueue(self, req: Request, *, force: bool = False) -> Request:
+        """Re-queue an existing QUEUED request (router rerouting path).
+
+        Acceptance is binding: a request that was admitted to some
+        queue must never be silently dropped mid-flight, so a full
+        queue **raises** here instead of rejecting — callers check
+        :attr:`queue_capacity` first (or pass ``force=True``, the
+        replica-loss re-plan path, where transiently overshooting the
+        backpressure bound beats losing accepted work).
+        """
         if req.state != QUEUED:
             raise ValueError(
                 f"only QUEUED requests can be enqueued, got {req.state}"
             )
-        if self.max_queue is not None and len(self.queue) >= self.max_queue:
-            req.state = REJECTED
-            self.n_rejected += 1
-            return req
+        if (
+            not force
+            and self.max_queue is not None
+            and len(self.queue) >= self.max_queue
+        ):
+            raise ValueError(
+                f"queue full ({len(self.queue)}/{self.max_queue}); "
+                f"rejecting an already-accepted request would break "
+                f"conservation — check queue_capacity before enqueue"
+            )
         if self.buckets is not None:
             req.bucket_len = self.buckets.bucket_len(len(req.prompt))
         self.requests[req.rid] = req
@@ -292,7 +306,13 @@ class Scheduler:
     def evict(self, rid: int, *, now: float = 0.0) -> Request:
         """Cancel a request.  ACTIVE: frees its slot (the engine masks
         it at the next boundary).  QUEUED: removed from the queue.
-        Terminal: no-op."""
+        Terminal: no-op.  Raises ``KeyError`` for a rid this replica
+        does not own (e.g. one already rerouted away)."""
+        if rid not in self.requests:
+            raise KeyError(
+                f"rid {rid} is not owned by this replica (rerouted away "
+                f"or never submitted here)"
+            )
         req = self.requests[rid]
         if req.done:
             return req
@@ -316,10 +336,45 @@ class Scheduler:
 
     def drain_queue(self) -> list[Request]:
         """Remove and return every queued request (router rerouting on a
-        degraded replica); they stay QUEUED for re-submission."""
+        degraded replica); they stay QUEUED for re-submission.
+
+        Ownership transfers with the request: the drained rids leave
+        this replica's registry, so exactly one scheduler ever answers
+        for a live rid (a stale registry entry would let an evict race
+        the reroute and corrupt the new owner's queue).
+        """
         out = list(self.queue)
         self.queue.clear()
+        for req in out:
+            self.requests.pop(req.rid, None)
         return out
+
+    def drain_active(self) -> list[Request]:
+        """Demote every ACTIVE request back to QUEUED and free its slot
+        (replica-loss re-planning: the KV state is gone, survivors
+        re-prefill ``prompt + generated`` elsewhere).  Returns them in
+        slot order with ownership removed, ready to ``enqueue`` on a
+        surviving replica."""
+        out = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slots[slot] = None
+            self._free.append(slot)
+            req.slot = None
+            req.state = QUEUED
+            self.requests.pop(req.rid, None)
+            out.append(req)
+        self._free.sort()
+        return out
+
+    @property
+    def queue_capacity(self) -> int | None:
+        """Admission slots left in the queue (``None`` = unbounded) —
+        the router's pre-reroute capacity check."""
+        if self.max_queue is None:
+            return None
+        return max(0, self.max_queue - len(self.queue))
 
     # -- views -------------------------------------------------------------
 
@@ -353,8 +408,15 @@ class Scheduler:
 
         return napalg.ragged_splits(self.num_slots, group)
 
-    def check_invariants(self) -> None:
-        """Assert the scheduler's structural invariants (test hook)."""
+    def check_invariants(self, peers: Sequence["Scheduler"] = ()) -> None:
+        """Assert the scheduler's structural invariants (test hook).
+
+        With ``peers`` (the other replicas behind the same router) this
+        becomes the cross-replica conservation check: a live rid is
+        held and registered by exactly one scheduler in the group, and
+        every replica's outstanding-token figure is consistent with its
+        per-request token counts.
+        """
         occupied = [i for i, r in enumerate(self.slots) if r is not None]
         assert len(self._free) + len(occupied) == self.num_slots, (
             self._free, occupied,
@@ -366,3 +428,39 @@ class Scheduler:
             assert req.slot == i and req.state == ACTIVE
         for req in self.queue:
             assert req.state == QUEUED and req.slot is None
+        # outstanding-token accounting consistent with per-request
+        # token counts (the router's load metric must never drift)
+        live = list(self.queue) + self.active()
+        for req in live:
+            assert req.remaining == req.max_new_tokens - len(req.generated), (
+                req.rid, req.remaining, req.max_new_tokens, req.generated,
+            )
+            assert req.remaining >= 1, (req.rid, req.state)
+        assert self.outstanding_tokens() == sum(r.remaining for r in live)
+        if not peers:
+            return
+        # global rid uniqueness across the replica group: each live rid
+        # is registered with exactly one scheduler and held in exactly
+        # one container
+        group = (self, *peers)
+        registered: dict[int, int] = {}
+        held: dict[int, int] = {}
+        for gi, s in enumerate(group):
+            for rid, req in s.requests.items():
+                if req.done:
+                    continue
+                assert rid not in registered, (
+                    f"live rid {rid} registered with schedulers "
+                    f"{registered[rid]} and {gi}"
+                )
+                registered[rid] = gi
+            for req in list(s.queue) + s.active():
+                assert req.rid not in held, (
+                    f"live rid {req.rid} held by schedulers "
+                    f"{held[req.rid]} and {gi}"
+                )
+                held[req.rid] = gi
+                assert req.rid in s.requests, (
+                    f"rid {req.rid} held by scheduler {gi} but not "
+                    f"registered there"
+                )

@@ -377,6 +377,184 @@ def test_router_all_degraded_still_routes():
     assert req.state == QUEUED and req.rid in r.placement
 
 
+def test_evict_after_reroute_goes_through_single_owner():
+    # layer-0 counterexample (submit, degrade, evict-via-stale-owner):
+    # before single ownership, the drained rid stayed in the source
+    # registry and evicting through it crashed in deque.remove
+    from repro.serve import Router
+
+    a, b = _FakeReplica(1), _FakeReplica(1)
+    r = Router([a, b], straggler_threshold=2.0, recovery=2)
+    first = r.submit([1], 50)
+    a.scheduler.admit()
+    q = a.submit([1], 5)
+    for step in range(4):
+        assert r.observe_step(0, step, 1.0)
+    assert not r.observe_step(0, 4, 25.0)  # degrade -> reroute
+    # ownership moved with the request: exactly one registry owns it
+    assert q.rid not in a.scheduler.requests
+    assert q.rid in b.scheduler.requests
+    with pytest.raises(KeyError):
+        a.scheduler.evict(q.rid)
+    # the router's placement stayed accurate, so evicting through it
+    # reaches the real owner
+    r.evict(q.rid)
+    assert q.state == EVICTED
+    assert first.state == ACTIVE  # the active request rode out the stall
+    a.scheduler.check_invariants(peers=[b.scheduler])
+
+
+def test_reroute_keeps_accepted_request_when_no_peer_has_room():
+    # layer-0 counterexample (submit, submit, degrade): before the
+    # capacity-aware reroute, draining into a full peer queue flipped
+    # an accepted request to REJECTED mid-flight
+    from repro.runtime.fault import ReplicaHealth, StragglerMonitor
+    from repro.serve import Router
+
+    a = _FakeReplica(1, max_queue=1)
+    b = _FakeReplica(1, max_queue=1)
+    h = [
+        ReplicaHealth(
+            StragglerMonitor(threshold=2.0, warmup=1), recovery=2
+        )
+        for _ in range(2)
+    ]
+    r = Router([a, b], health=h)
+    for i in (0, 1):
+        r.observe_step(i, 0, 1.0)
+        r.observe_step(i, 1, 1.0)
+    qa = r.submit([1], 5)     # -> replica 0 (tie, lowest index)
+    qb = r.submit([1], 5)     # -> replica 1; both queues now full
+    assert not r.observe_step(0, 2, 25.0)  # degrade 0 -> reroute
+    # acceptance is binding: no room on the peer, so the request stays
+    # queued (FIFO position intact) on the degraded replica
+    assert qa.state == QUEUED and r.placement[qa.rid] == 0
+    assert list(a.scheduler.queue) == [qa]
+    assert qb.state == QUEUED and r.placement[qb.rid] == 1
+    a.scheduler.check_invariants(peers=[b.scheduler])
+
+
+def test_pick_prefers_replica_with_queue_capacity():
+    from repro.serve import Router
+
+    a = _FakeReplica(1, max_queue=1)
+    b = _FakeReplica(1)
+    r = Router([a, b])
+    big = b.scheduler.submit([1], 100)
+    b.scheduler.admit()           # replica 1 heavily loaded but roomy
+    a.scheduler.submit([1], 1)    # replica 0 light but queue full
+    req = r.submit([1], 1)
+    # least-loaded would pick the full replica 0 and reject; capacity
+    # preference routes to the loaded-but-roomy replica 1 instead
+    assert req.state == QUEUED
+    assert r.placement[req.rid] == 1
+    assert big.state == ACTIVE
+
+
+def test_fail_replica_replans_queued_and_active():
+    from repro.serve import Router
+
+    a = _FakeReplica(2, max_queue=1)
+    b = _FakeReplica(1, max_queue=1)
+    r = Router([a, b])
+    act = r.submit([1], 10)       # -> replica 0 (tie, lowest index)
+    a.scheduler.admit()
+    q1 = a.submit([1], 5)         # queued on replica 0 (queue full)
+    b_q = r.submit([1], 3)        # -> replica 1 (less loaded)
+    moved = r.fail_replica(0)
+    assert moved == 2 and 0 in r.failed
+    # the dead replica is empty — its work drained into the re-plan
+    assert a.scheduler.idle and not a.scheduler.requests
+    # the active request lost its KV state: demoted to QUEUED, slot
+    # released, generated tokens kept for the re-prefill
+    assert act.state == QUEUED and act.slot is None
+    # survivors keep FIFO order: b's own head, then the demoted
+    # active (admitted first), then the queued mover — force-enqueued
+    # past b's backpressure bound rather than dropped
+    assert [x.rid for x in b.scheduler.queue] == [b_q.rid, act.rid, q1.rid]
+    assert r.placement[act.rid] == 1 and r.placement[q1.rid] == 1
+    # a dead replica never receives traffic again: with the survivor
+    # over its bound the submit is REJECTED (honest backpressure),
+    # never routed to the corpse
+    rejected = r.submit([1], 1)
+    assert rejected.state == REJECTED and rejected.rid not in r.placement
+    while not b.scheduler.idle:  # drain the survivor
+        b.scheduler.admit()
+        b.scheduler.record_token(0, 1)
+    assert r.placement[r.submit([1], 1).rid] == 1
+    b.scheduler.check_invariants(peers=[a.scheduler])
+    with pytest.raises(RuntimeError):
+        r.fail_replica(1)  # no survivor to re-plan onto
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_router_trace_fuzz_cross_replica_conservation(seed):
+    """Random multi-replica traces (submit/admit/decode/health/evict/
+    loss) hold the cross-replica conservation invariants at every step:
+    global rid uniqueness and outstanding-token accounting."""
+    from repro.runtime.fault import ReplicaHealth, StragglerMonitor
+    from repro.serve import Router
+
+    rng = random.Random(seed)
+    n = rng.choice([2, 3])
+    reps = [
+        _FakeReplica(
+            rng.randrange(1, 3),
+            max_queue=rng.choice([None, 1, 2]),
+            eos_id=99,
+        )
+        for _ in range(n)
+    ]
+    health = [
+        ReplicaHealth(
+            StragglerMonitor(threshold=2.0, warmup=1, alpha=0.5),
+            recovery=2,
+        )
+        for _ in range(n)
+    ]
+    r = Router(reps, health=health)
+    step = 0
+    for i in range(n):
+        for _ in range(2):
+            r.observe_step(i, step, 1.0)
+            step += 1
+    for _ in range(120):
+        op = rng.random()
+        alive = [i for i in range(n) if i not in r.failed]
+        if op < 0.30:
+            r.submit([1 + rng.randrange(9)], rng.randrange(1, 4))
+        elif op < 0.45:
+            reps[rng.choice(alive)].scheduler.admit()
+        elif op < 0.70:
+            i = rng.choice(alive)
+            for slot in range(reps[i].scheduler.num_slots):
+                reps[i].scheduler.record_token(
+                    slot, rng.choice([99, 1 + rng.randrange(9)])
+                )
+        elif op < 0.80:
+            r.observe_step(
+                rng.choice(alive), step, rng.choice([1.0, 25.0])
+            )
+            step += 1
+        elif op < 0.92:
+            live = [
+                rid
+                for i in alive
+                for rid, req in reps[i].scheduler.requests.items()
+                if not req.done
+            ]
+            if live:
+                r.evict(rng.choice(live))
+        elif len(alive) >= 2:
+            r.fail_replica(rng.choice(alive))
+        # cross-replica conservation after every operation
+        for i, rep in enumerate(reps):
+            rep.scheduler.check_invariants(
+                peers=[x.scheduler for j, x in enumerate(reps) if j != i]
+            )
+
+
 # ---------------------------------------------------------------------------
 # Engine (single device): continuous batching == serial fixed batch
 
